@@ -1,0 +1,36 @@
+"""Fig. 4: design-iteration comparison on Tree Reduction.
+
+Paper claims: (a) parallel-invoker executes TR ~24% faster than strawman/
+pub-sub at 0ms delay (invocation-bound, 512 leaf tasks); (b) pub/sub pulls
+ahead of strawman as task duration grows (fewer TCP round-trips).
+"""
+from __future__ import annotations
+
+from benchmarks import common
+from repro.apps import tree_reduction_dag
+
+
+def run(n: int = 512, delays_ms=(0.0, 50.0, 100.0)) -> list[dict]:
+    rows = []
+    engines = [
+        ("strawman", common.strawman()),
+        ("pubsub", common.pubsub()),
+        ("parallel_invoker", common.parallel_invoker()),
+    ]
+    for delay in delays_ms:
+        for label, eng in engines:
+            dag = tree_reduction_dag(n, sleep_s=common.sleep_s(delay),
+                                     payload_bytes=1 << 20)
+            r = common.timed(eng, dag)
+            r["label"] = f"{label}@{delay:g}ms"
+            r["derived"] = f"delay={delay:g}ms"
+            rows.append(r)
+    return rows
+
+
+def main() -> None:
+    common.emit(run(), "fig04")
+
+
+if __name__ == "__main__":
+    main()

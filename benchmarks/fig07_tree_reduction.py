@@ -1,0 +1,39 @@
+"""Fig. 7: TR end-to-end — WUKONG vs design iterations vs serverful Dask.
+
+Paper claims: WUKONG beats every centralized iteration; at 0ms delay the
+communication-bound TR still favors Dask (EC2); with 250-500ms task
+delays WUKONG overtakes Dask (EC2) (~2.5x at 500ms).
+"""
+from __future__ import annotations
+
+from benchmarks import common
+from repro.apps import tree_reduction_dag
+
+
+def run(n: int = 512, delays_ms=(0.0, 250.0, 500.0)) -> list[dict]:
+    rows = []
+    engines = [
+        ("wukong", common.wukong()),
+        ("strawman", common.strawman()),
+        ("pubsub", common.pubsub()),
+        ("parallel_invoker", common.parallel_invoker()),
+        ("dask_ec2", common.serverful_ec2()),
+        ("dask_laptop", common.serverful_laptop()),
+    ]
+    for delay in delays_ms:
+        for label, eng in engines:
+            dag = tree_reduction_dag(n, sleep_s=common.sleep_s(delay),
+                                     payload_bytes=1 << 20)
+            r = common.timed(eng, dag)
+            r["label"] = f"{label}@{delay:g}ms"
+            r["derived"] = f"delay={delay:g}ms"
+            rows.append(r)
+    return rows
+
+
+def main() -> None:
+    common.emit(run(), "fig07")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Fig. 8: blocked GEMM — WUKONG vs serverful, growing problem size.
+
+Paper claims: WUKONG >2x faster than Dask (EC2) and >5x faster than Dask
+(Laptop) at 10k x 10k; the largest sizes OOM the serverful setups while
+WUKONG scales out elastically (we mark the laptop DNF by worker-memory
+model rather than crashing the container).
+"""
+from __future__ import annotations
+
+from benchmarks import common
+from repro.apps import gemm_dag
+
+
+def run(sizes=((512, 128), (1024, 128), (2048, 128))) -> list[dict]:
+    rows = []
+    for n, bs in sizes:
+        for label, eng in [
+            ("wukong", common.wukong()),
+            ("dask_ec2", common.serverful_ec2()),
+            ("dask_laptop", common.serverful_laptop()),
+        ]:
+            dag = gemm_dag(n, bs, sleep_per_flop=common.sleep_per_flop())
+            r = common.timed(eng, dag)
+            r["label"] = f"{label}@n={n}"
+            r["derived"] = f"blocks={(n // bs) ** 2}"
+            rows.append(r)
+    return rows
+
+
+def main() -> None:
+    common.emit(run(), "fig08")
+
+
+if __name__ == "__main__":
+    main()

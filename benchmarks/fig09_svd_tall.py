@@ -1,0 +1,35 @@
+"""Fig. 9: SVD of tall-and-skinny matrices (TSQR), growing row counts.
+
+Paper claims: both WUKONG and Dask (EC2) dwarf the laptop; Dask (EC2)
+wins small sizes, WUKONG overtakes as rows grow (parallelism outweighs
+communication).
+"""
+from __future__ import annotations
+
+from benchmarks import common
+from repro.apps import tsqr_svd_dag
+
+
+def run(row_sizes=(4096, 8192, 16384), cols: int = 64,
+        n_blocks: int = 16) -> list[dict]:
+    rows = []
+    for nrows in row_sizes:
+        for label, eng in [
+            ("wukong", common.wukong()),
+            ("dask_ec2", common.serverful_ec2()),
+            ("dask_laptop", common.serverful_laptop()),
+        ]:
+            dag = tsqr_svd_dag(nrows, cols, n_blocks, sleep_per_flop=common.sleep_per_flop())
+            r = common.timed(eng, dag)
+            r["label"] = f"{label}@rows={nrows}"
+            r["derived"] = f"cols={cols}"
+            rows.append(r)
+    return rows
+
+
+def main() -> None:
+    common.emit(run(), "fig09")
+
+
+if __name__ == "__main__":
+    main()

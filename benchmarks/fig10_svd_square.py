@@ -1,0 +1,38 @@
+"""Fig. 10: rank-5 randomized SVD of an n x n matrix (+ ideal storage).
+
+Paper claims: Dask (EC2) wins small sizes; WUKONG wins the largest
+(3.1x at 100k x 100k); with an ideally-fast intermediate store WUKONG
+executes in a fraction of the time (95.5% less than Dask EC2 at the
+largest size) — bounding how much of WUKONG's time is KV-store traffic.
+"""
+from __future__ import annotations
+
+from benchmarks import common
+from repro.apps import randomized_svd_dag
+
+
+def run(sizes=(512, 1024, 2048, 4096), n_blocks: int = 8) -> list[dict]:
+    rows = []
+    for n in sizes:
+        for label, eng, kw in [
+            ("wukong", common.wukong(), {}),
+            ("wukong_ideal", common.wukong(), {"ideal_storage": True}),
+            ("dask_ec2", common.serverful_ec2(), {}),
+            ("dask_laptop", common.serverful_laptop(), {}),
+        ]:
+            dag = randomized_svd_dag(n, 5, 5, n_blocks,
+                         sleep_per_flop=common.sleep_per_flop(),
+                         **kw)
+            r = common.timed(eng, dag)
+            r["label"] = f"{label}@n={n}"
+            r["derived"] = f"kv_bytes={r['kv_bytes']}"
+            rows.append(r)
+    return rows
+
+
+def main() -> None:
+    common.emit(run(), "fig10")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Fig. 11: SVC (hinge-loss linear SVM) with growing sample counts.
+
+Paper claims: Dask (EC2) slightly faster at the smallest size; WUKONG
+overtakes as samples grow, ~2x at the largest.
+"""
+from __future__ import annotations
+
+from benchmarks import common
+from repro.apps import svc_dag
+
+
+def run(sample_sizes=(8192, 32768, 131072), n_blocks: int = 16,
+        n_iters: int = 3) -> list[dict]:
+    rows = []
+    for n in sample_sizes:
+        for label, eng in [
+            ("wukong", common.wukong()),
+            ("dask_ec2", common.serverful_ec2()),
+            ("dask_laptop", common.serverful_laptop()),
+        ]:
+            dag = svc_dag(n, n_blocks, n_iters, sleep_per_flop=common.sleep_per_flop())
+            r = common.timed(eng, dag)
+            r["label"] = f"{label}@n={n}"
+            r["derived"] = f"iters={n_iters}"
+            rows.append(r)
+    return rows
+
+
+def main() -> None:
+    common.emit(run(), "fig11")
+
+
+if __name__ == "__main__":
+    main()

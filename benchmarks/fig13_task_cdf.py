@@ -1,0 +1,37 @@
+"""Fig. 13: per-task latency breakdown CDF for SVD2.
+
+Paper claims: most tasks see negligible KV time but a long tail of
+multi-second reads/writes of large intermediates dominates job time.
+We print read/compute/write percentiles from the executor metrics.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.apps import randomized_svd_dag
+
+
+def run(n: int = 2048, n_blocks: int = 8) -> list[dict]:
+    eng = common.wukong()
+    dag = randomized_svd_dag(n, 5, 5, n_blocks)
+    r = common.timed(eng, dag)
+    recs = [m for m in r["metrics"] if m.get("event") == "executed"]
+    rows = []
+    for field in ("read_ms", "compute_ms", "write_ms"):
+        vals = np.array([m.get(field, 0.0) for m in recs])
+        for p in (50, 90, 99, 100):
+            rows.append({
+                "label": f"{field}_p{p}",
+                "wall_s": float(np.percentile(vals, p)) / 1e3,
+                "derived": f"n_tasks={len(recs)}",
+            })
+    return rows
+
+
+def main() -> None:
+    common.emit(run(), "fig13")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,183 @@
+"""§Perf hillclimbing: hypothesis -> change -> re-lower -> validate.
+
+Three cells (chosen from the baseline roofline table):
+  1. llama3_405b/train_4k     — largest memory term; representative big
+                                 dense training job.
+  2. xlstm_350m/prefill_32k   — the most collective-bound cell.
+  3. mixtral_8x7b/train_4k    — MoE + SWA serving-oriented arch (the
+                                 family the paper's serverless serving
+                                 story targets); best baseline fraction,
+                                 so the closest to roofline-pushable.
+
+Each iteration is a Variant re-compiled through the SAME dry-run +
+depth-probe machinery (launch/dryrun.py), so before/after numbers come
+from compiled artifacts, not estimates. The flash-attention credit is
+*measured*: we compile a windowed variant and extrapolate the
+S²-dependent byte term that the (interpret-validated) Pallas flash
+kernel keeps in VMEM on the TPU target.
+
+Run:  PYTHONPATH=src python -m benchmarks.hillclimb [cell...]
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+PEAK, HBM, ICI = 197e12, 819e9, 50e9
+
+
+def terms(m: dict, corr_flops: float = 0.0) -> dict:
+    t = {
+        "compute": (m["flops"] + corr_flops) / PEAK,
+        "memory": m["bytes_accessed"] / HBM,
+        "collective": m["collective_bytes"]["total"] / ICI,
+    }
+    t["dominant"] = max(("compute", "memory", "collective"), key=t.get)
+    t["bound_s"] = t[t["dominant"]]
+    return t
+
+
+def show(tag: str, t: dict, model_flops: float) -> None:
+    frac = (model_flops / PEAK) / t["bound_s"] * 100 if t["bound_s"] else 0
+    print(f"  {tag:34s} comp={t['compute']:9.3f}s mem={t['memory']:9.3f}s "
+          f"coll={t['collective']:9.3f}s dom={t['dominant']:10s} "
+          f"roofline={frac:5.1f}%")
+
+
+def run(arch: str, shape: str, variant_str: str):
+    from repro.launch.dryrun import Variant, parse_variant, run_cell
+    v = parse_variant(variant_str)
+    rec = run_cell(arch, shape, multi_pod=False, variant=v, verbose=False,
+                   probe=True)
+    assert rec["ok"], rec.get("error")
+    return rec
+
+
+def cell_llama_train() -> None:
+    """llama3_405b / train_4k — memory-dominated by S² score arrays."""
+    from benchmarks.roofline import inner_scan_correction, \
+        model_flops_per_chip
+    from repro.configs import get_config
+    cfg = get_config("llama3_405b")
+    mf = model_flops_per_chip(cfg, "train_4k")
+    print("\n=== llama3_405b / train_4k ===")
+    base = run("llama3_405b", "train_4k", "baseline")
+    d0 = base["probe"]["derived"]
+    t0 = terms(d0)
+    show("baseline (paper-faithful)", t0, mf)
+
+    # H1: the memory term is dominated by materialized (B,S,S,H) score
+    # tensors; napkin: 126L x 3passes x 256·4096²·128 x 4B /256chips
+    # ≈ 1.0e15 B ≈ 60% of the 1.76e15 measured. The flash kernel keeps
+    # them in VMEM. Measure the S²-term by compiling window=512.
+    win = run("llama3_405b", "train_4k", "window=512")
+    dw = win["probe"]["derived"]
+    S, W = 4096, 512
+    s2_bytes = (d0["bytes_accessed"] - dw["bytes_accessed"]) / (1 - W / S)
+    t1 = dict(d0)
+    t1 = {**d0, "bytes_accessed": d0["bytes_accessed"] - s2_bytes}
+    tt1 = terms(t1)
+    print(f"  measured S² byte term: {s2_bytes:.3e} B/chip "
+          f"({100 * s2_bytes / d0['bytes_accessed']:.0f}% of memory term)")
+    show("it1: +flash kernel (VMEM scores)", tt1, mf)
+
+    # H2: MODEL/HLO = 0.36 -> full remat recomputes the whole block.
+    # Selective remat (remat=0 here: save activations) trades bytes for
+    # flops; napkin: flops x ~0.7.
+    nr = run("llama3_405b", "train_4k", "remat=0")
+    d2 = nr["probe"]["derived"]
+    d2f = {**d2, "bytes_accessed": d2["bytes_accessed"] - s2_bytes}
+    tt2 = terms(d2f)
+    show("it2: it1 + no-remat", tt2, mf)
+
+    # H3: microbatching reduces live activation footprint; probe at the
+    # HLO level keeps bytes ~flat (scan counted once) so we report the
+    # variant only as a compile-validation, not a win.
+    mb = run("llama3_405b", "train_4k", "n_microbatches=4")
+    print(f"  it3: microbatch=4 compiles ok "
+          f"(lower/compile {mb['lower_s']}/{mb['compile_s']}s) — "
+          f"memory_analysis temp {mb['memory_analysis'].get('temp_size_in_bytes', 0):.2e}B "
+          f"vs baseline {base['memory_analysis'].get('temp_size_in_bytes', 0):.2e}B")
+
+
+def cell_xlstm_prefill() -> None:
+    """xlstm_350m / prefill_32k — the most collective-bound cell."""
+    from benchmarks.roofline import inner_scan_correction, \
+        model_flops_per_chip
+    from repro.configs import get_config
+    cfg = get_config("xlstm_350m")
+    mf = model_flops_per_chip(cfg, "prefill_32k")
+    corr = inner_scan_correction("xlstm_350m", "prefill_32k", cfg)
+    print("\n=== xlstm_350m / prefill_32k ===")
+    base = run("xlstm_350m", "prefill_32k", "baseline")
+    t0 = terms(base["probe"]["derived"], corr)
+    show("baseline (paper-faithful)", t0, mf)
+
+    # H1: the dominant collective is the all-gather of full-vocab logits
+    # (32 x 32768 x 50304 bf16 ≈ 0.4GB/chip after gather). Keep logits
+    # vocab-sharded. Napkin: removes nearly all output-side collectives.
+    it1 = run("xlstm_350m", "prefill_32k", "shard_logits=1")
+    t1 = terms(it1["probe"]["derived"], corr)
+    show("it1: vocab-sharded logits", t1, mf)
+
+    # H2: 4-head mLSTM cannot shard over 16-way model axis -> TP only
+    # slivers the projections and replication-gathers activations.
+    # Replicate weights (350M fits trivially) and give the model axis to
+    # batch: pure DP. Napkin: all remaining TP collectives vanish.
+    it2 = run("xlstm_350m", "prefill_32k",
+              "shard_logits=1,tensor_parallel=0")
+    t2 = terms(it2["probe"]["derived"], corr)
+    show("it2: it1 + no-TP (replicated weights)", t2, mf)
+
+
+def cell_mixtral_train() -> None:
+    """mixtral_8x7b / train_4k — MoE dispatch + score materialization."""
+    from benchmarks.roofline import model_flops_per_chip
+    from repro.configs import get_config
+    cfg = get_config("mixtral_8x7b")
+    mf = model_flops_per_chip(cfg, "train_4k")
+    print("\n=== mixtral_8x7b / train_4k ===")
+    base = run("mixtral_8x7b", "train_4k", "baseline")
+    d0 = base["probe"]["derived"]
+    t0 = terms(d0)
+    show("baseline (paper-faithful)", t0, mf)
+
+    # H1: flash credit (SWA window 4096 == S at train_4k, so scores are
+    # effectively full). Measure S² term via window=512 probe.
+    win = run("mixtral_8x7b", "train_4k", "window=512")
+    dw = win["probe"]["derived"]
+    s2 = (d0["bytes_accessed"] - dw["bytes_accessed"]) / (1 - 512 / 4096)
+    t1 = terms({**d0, "bytes_accessed": d0["bytes_accessed"] - s2})
+    print(f"  measured S² byte term: {s2:.3e} B/chip")
+    show("it1: +flash kernel (VMEM scores)", t1, mf)
+
+    # H2: MoE dispatch one-hots cost O(g) per token; halving the group
+    # halves dispatch flops+bytes at slightly worse capacity behaviour.
+    it2 = run("mixtral_8x7b", "train_4k", "moe_group=1024")
+    d2 = it2["probe"]["derived"]
+    t2 = terms({**d2, "bytes_accessed": d2["bytes_accessed"] - s2})
+    show("it2: it1 + moe_group 2048->1024", t2, mf)
+
+    # H3: no-remat: trade recompute flops for activation bytes.
+    it3 = run("mixtral_8x7b", "train_4k", "moe_group=1024,remat=0")
+    d3 = it3["probe"]["derived"]
+    t3 = terms({**d3, "bytes_accessed": d3["bytes_accessed"] - s2})
+    show("it3: it2 + no-remat", t3, mf)
+
+
+CELLS = {
+    "llama": cell_llama_train,
+    "xlstm": cell_xlstm_prefill,
+    "mixtral": cell_mixtral_train,
+}
+
+
+def main() -> None:
+    which = sys.argv[1:] or list(CELLS)
+    for name in which:
+        CELLS[name]()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,225 @@
+"""Roofline analysis from the dry-run's compiled artifacts (§Roofline).
+
+Per (arch × shape) cell on the single-pod 16x16 mesh:
+
+    compute term    = HLO_FLOPs_per_chip / 197e12      [s]
+    memory term     = HLO_bytes_per_chip / 819e9       [s]
+    collective term = collective_bytes_per_chip / 50e9 [s]
+
+Sources: the depth-probe derived metrics in benchmarks/results/dryrun/
+(*16x16__<variant>.json). The probe reconstructs exact per-device totals
+from unrolled 1- and 2-superblock compiles (XLA cost analysis counts a
+``while`` body once — launch/dryrun.py:depth_probe). HLO flops/bytes are
+PER CHIP because the compiled module is the per-device SPMD program.
+
+Analytic inner-scan correction: Mamba's chunk scan, mLSTM's chunk scan
+and sLSTM's time scan remain rolled inside the probe compiles, so their
+bodies are also counted once. ``inner_scan_correction`` adds the
+(trip_count - 1) missing bodies from closed-form FLOP counts of the scan
+body (documented per family below); it only affects xlstm and jamba
+train/prefill cells and is reported separately so the raw HLO numbers
+stay visible.
+
+MODEL_FLOPS = 6·N_active·D (train; fwd+bwd) or 2·N_active·D (inference),
+per chip. The ratio MODEL_FLOPS / HLO_FLOPs shows how much of compiled
+compute is "useful" (catches remat/dispatch/recompute waste).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+PEAK = 197e12
+HBM = 819e9
+ICI = 50e9
+CHIPS = 256
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+SHAPE_TOKENS = {
+    "train_4k": 4096 * 256,
+    "prefill_32k": 32768 * 32,
+    "decode_32k": 128,          # one token x batch
+    "long_500k": 1,
+}
+TRAIN_SHAPES = {"train_4k"}
+
+
+def inner_scan_correction(arch: str, shape: str, cfg) -> float:
+    """Global missing FLOPs from rolled inner sequence scans (see module
+    docstring); returns PER-CHIP flops to add."""
+    if shape.startswith("decode") or shape.startswith("long"):
+        return 0.0  # decode paths are single-step: no inner scan
+    seq = 4096 if shape == "train_4k" else 32768
+    batch = 256 if shape == "train_4k" else 32
+    bwd_mult = 3.0 if shape in TRAIN_SHAPES else 1.0
+    total = 0.0
+    d = cfg.d_model
+    for entry in cfg.block_pattern:
+        mixer = cfg.mixer_of(entry)
+        n_layers_of = cfg.n_repeats
+        if mixer == "mamba":
+            chunk = 256
+            nchunks = max(1, seq // chunk)
+            di, N = cfg.d_inner, cfg.ssm_state_dim
+            import math
+            body = (math.log2(chunk) + 2) * 2 * batch * chunk * di * N
+            total += (nchunks - 1) * body * n_layers_of
+        elif mixer == "mlstm":
+            chunk = 256
+            nchunks = max(1, seq // chunk)
+            dk = int(cfg.mlstm_proj_factor * d)
+            hd = dk // cfg.n_heads
+            body = (4 * batch * chunk * chunk * dk
+                    + 6 * batch * chunk * hd * dk)
+            total += (nchunks - 1) * body * n_layers_of
+        elif mixer == "slstm":
+            body = 8 * batch * d * (d // cfg.n_heads) + 24 * batch * d
+            total += (seq - 1) * body * n_layers_of
+    return total * bwd_mult / CHIPS
+
+
+def model_flops_per_chip(cfg, shape: str) -> float:
+    n_active = cfg.param_counts()["active"]
+    tokens = SHAPE_TOKENS[shape]
+    mult = 6.0 if shape in TRAIN_SHAPES else 2.0
+    return mult * n_active * tokens / CHIPS
+
+
+def modeled_hbm_bytes_per_chip(cfg, shape: str, *, remat: bool = True,
+                               flash: bool = False) -> float:
+    """Modeled TPU HBM traffic per chip per step.
+
+    Why this exists: XLA's cost-analysis "bytes accessed" counts every
+    HLO op's operands as if they hit memory — on the CPU backend this is
+    a pre-fusion UPPER BOUND (llama3 train would need 2145s of HBM time,
+    which is physically absurd). The roofline table reports both the raw
+    bound and this model:
+
+      params:  bf16 read (fwd) + read (bwd) + fp32 grad w+r + AdamW
+               m/v r+w + param write  ≈ 30 bytes/param, sharded
+      acts:    per-layer boundary saves (remat) or ~6 intermediates
+               (no-remat), bf16 write+read
+      scores:  attention logits/probs fp32, ~8 passes train / 2 passes
+               inference — ZERO when ``flash`` (the Pallas kernel keeps
+               them in VMEM); sliding windows cap the k-extent
+      decode:  params read + full KV cache read + pointwise state
+    """
+    N = cfg.param_counts()["total"]
+    d, H, L = cfg.d_model, cfg.n_heads, cfg.n_layers
+    seq_of = {"train_4k": 4096, "prefill_32k": 32768,
+              "decode_32k": 32768, "long_500k": 524288}
+    bsz_of = {"train_4k": 256, "prefill_32k": 32, "decode_32k": 128,
+              "long_500k": 1}
+    S, B = seq_of[shape], bsz_of[shape]
+    tokens = B * S
+    n_attn = sum(1 for e in cfg.block_pattern
+                 if cfg.mixer_of(e) == "attn") * cfg.n_repeats
+
+    if shape in TRAIN_SHAPES or shape == "prefill_32k":
+        train = shape in TRAIN_SHAPES
+        params = (30.0 if train else 2.0) * N
+        act_passes = (4.0 if remat else 24.0) if train else 2.0
+        acts = act_passes * L * tokens * d * 2
+        kv_extent = min(S, cfg.sliding_window or S)
+        score_passes = 0.0 if flash else (8.0 if train else 2.0)
+        scores = score_passes * B * S * kv_extent * H * 4 * n_attn
+        return (params + acts + scores) / CHIPS
+    # decode: params + cache traffic dominate
+    params = 2.0 * N
+    kv_extent = min(S, cfg.sliding_window or S)
+    cache = n_attn * B * kv_extent * cfg.n_kv_heads * cfg.hd * 2 * 2
+    state = 0.0
+    for e in cfg.block_pattern:
+        m = cfg.mixer_of(e)
+        if m == "mamba":
+            state += cfg.n_repeats * B * cfg.d_inner * cfg.ssm_state_dim * 4
+        elif m == "mlstm":
+            dk = int(cfg.mlstm_proj_factor * d)
+            state += cfg.n_repeats * B * dk * (dk // cfg.n_heads) * 4
+    return (params + 2 * cache + 2 * state) / CHIPS
+
+
+def load_cells(variant: str = "baseline") -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(
+            os.path.join(RESULTS, f"*__16x16__{variant}.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("ok") and "probe" in rec:
+            cells.append(rec)
+    return cells
+
+
+def analyse(rec: dict) -> dict:
+    from repro.configs import get_config
+
+    arch, shape = rec["arch"], rec["shape"]
+    cfg = get_config(arch)
+    d = rec["probe"]["derived"]
+    corr = inner_scan_correction(arch, shape, cfg)
+    flops = d["flops"] + corr
+    t_comp = flops / PEAK
+    t_mem_raw = d["bytes_accessed"] / HBM           # unfused upper bound
+    t_mem = modeled_hbm_bytes_per_chip(cfg, shape) / HBM
+    t_coll = d["collective_bytes"]["total"] / ICI
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dom = max(terms, key=terms.get)
+    mf = model_flops_per_chip(cfg, shape)
+    bound = max(terms.values())
+    return {
+        "arch": arch, "shape": shape, "variant": rec.get("variant", "?"),
+        "t_compute": t_comp, "t_memory": t_mem, "t_memory_raw": t_mem_raw,
+        "t_collective": t_coll,
+        "dominant": dom,
+        "model_flops": mf,
+        "hlo_flops": flops,
+        "useful_ratio": mf / flops if flops else 0.0,
+        "roofline_fraction": (mf / PEAK) / bound if bound else 0.0,
+        "corr_flops": corr,
+    }
+
+
+SUGGESTIONS = {
+    "compute": "reduce recompute (remat policy) / raise useful-FLOP ratio",
+    "memory": "fuse elementwise chains; bigger per-chip tiles; bf16 "
+              "activations end-to-end",
+    "collective": "reshard to cut all-gathers (FSDP off / 2D sharding), "
+                  "overlap collectives with compute",
+}
+
+
+def main() -> None:
+    variant = sys.argv[1] if len(sys.argv) > 1 else "baseline"
+    cells = load_cells(variant)
+    if not cells:
+        print("no probe results found; run "
+              "`python -m repro.launch.dryrun --all --probe` first")
+        return
+    rows = [analyse(r) for r in cells]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    hdr = (f"{'arch':24s} {'shape':12s} {'t_comp(s)':>10s} {'t_mem(s)':>10s} "
+           f"{'t_memRAW':>9s} {'t_coll(s)':>10s} {'dominant':>10s} "
+           f"{'MODEL/HLO':>9s} {'roofline%':>9s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        print(f"{r['arch']:24s} {r['shape']:12s} {r['t_compute']:10.4f} "
+              f"{r['t_memory']:10.4f} {r['t_memory_raw']:9.2f} "
+              f"{r['t_collective']:10.4f} "
+              f"{r['dominant']:>10s} {r['useful_ratio']:9.3f} "
+              f"{100 * r['roofline_fraction']:8.1f}%")
+    print()
+    for r in rows:
+        print(f"{r['arch']}/{r['shape']}: {r['dominant']}-bound -> "
+              f"{SUGGESTIONS[r['dominant']]}")
+    out = os.path.join(os.path.dirname(RESULTS), f"roofline_{variant}.json")
+    with open(out, "w") as f:
+        json.dump(rows, f, indent=2)
+    print(f"\nsaved {out}")
+
+
+if __name__ == "__main__":
+    main()

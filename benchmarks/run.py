@@ -1,0 +1,64 @@
+"""Benchmark entry point: one module per paper figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Scale-down knobs:
+``REPRO_SIM_SCALE`` (simulated-latency multiplier) and ``--quick``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller problem sizes (CI)")
+    ap.add_argument("--only", default=None, help="comma list, e.g. fig07")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        fig04_design_iterations,
+        fig07_tree_reduction,
+        fig08_gemm,
+        fig09_svd_tall,
+        fig10_svd_square,
+        fig11_svc,
+        fig12_factor_analysis,
+        fig13_task_cdf,
+    )
+    from benchmarks import common
+
+    figs = {
+        "fig04": lambda: fig04_design_iterations.run(
+            n=128 if args.quick else 512,
+            delays_ms=(0.0, 50.0) if args.quick else (0.0, 50.0, 100.0)),
+        "fig07": lambda: fig07_tree_reduction.run(
+            n=128 if args.quick else 512,
+            delays_ms=(0.0, 250.0) if args.quick else (0.0, 250.0, 500.0)),
+        "fig08": lambda: fig08_gemm.run(
+            sizes=((512, 128),) if args.quick
+            else ((512, 128), (1024, 128), (2048, 128))),
+        "fig09": lambda: fig09_svd_tall.run(
+            row_sizes=(4096,) if args.quick else (4096, 8192, 16384)),
+        "fig10": lambda: fig10_svd_square.run(
+            sizes=(512,) if args.quick else (512, 1024, 2048, 4096)),
+        "fig11": lambda: fig11_svc.run(
+            sample_sizes=(8192,) if args.quick else (8192, 32768, 131072)),
+        "fig12": lambda: fig12_factor_analysis.run(
+            n=128 if args.quick else 512),
+        "fig13": lambda: fig13_task_cdf.run(n=1024 if args.quick else 2048),
+    }
+    only = set(args.only.split(",")) if args.only else None
+    print("name,us_per_call,derived")
+    for name, fn in figs.items():
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        rows = fn()
+        common.emit(rows, name)
+        print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""Paper workloads (§V) expressed as blocked-array DAGs with JAX payloads."""
+from repro.apps.tree_reduction import tree_reduction_dag
+from repro.apps.gemm import gemm_dag
+from repro.apps.svd import tsqr_svd_dag, randomized_svd_dag
+from repro.apps.svc import svc_dag
+
+__all__ = [
+    "tree_reduction_dag",
+    "gemm_dag",
+    "tsqr_svd_dag",
+    "randomized_svd_dag",
+    "svc_dag",
+]

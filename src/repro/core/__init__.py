@@ -1,0 +1,28 @@
+"""WUKONG core: decentralized serverless DAG engine (the paper's contribution)."""
+from repro.core.api import GraphBuilder, delayed_graph
+from repro.core.dag import DAG, Task, TaskRef
+from repro.core.engine import (
+    ENGINES,
+    CentralizedConfig,
+    EngineConfig,
+    JobError,
+    JobReport,
+    ParallelInvokerEngine,
+    PubSubEngine,
+    ServerfulConfig,
+    ServerfulEngine,
+    StrawmanEngine,
+    WukongEngine,
+)
+from repro.core.faults import FaultConfig, SimulatedTaskFailure
+from repro.core.kvstore import CostModel, ShardedKVStore
+from repro.core.schedule import StaticSchedule, generate_static_schedules
+
+__all__ = [
+    "DAG", "Task", "TaskRef", "GraphBuilder", "delayed_graph",
+    "ENGINES", "EngineConfig", "CentralizedConfig", "ServerfulConfig",
+    "JobError", "JobReport", "WukongEngine", "StrawmanEngine",
+    "PubSubEngine", "ParallelInvokerEngine", "ServerfulEngine",
+    "FaultConfig", "SimulatedTaskFailure", "CostModel", "ShardedKVStore",
+    "StaticSchedule", "generate_static_schedules",
+]

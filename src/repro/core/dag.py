@@ -1,0 +1,161 @@
+"""DAG representation for WUKONG.
+
+A DAG maps task keys to ``Task`` objects. Tasks name their dependencies by
+key; edges always point dependency -> dependent (data flows along edges).
+
+The graph-construction surface mirrors Dask's: a task graph is a dict
+``{key: (callable, arg0, arg1, ...)}`` where string args naming other keys
+are dependencies, plus literal leaves ``{key: value}``. The paper's strawman
+was "a modification of the Python-written Dask distributed scheduler"; we
+keep the same representation so the serverful baseline and WUKONG run the
+exact same graphs (paper §V-D notes this is what made their comparison
+possible).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Iterable, Mapping, Sequence
+
+
+class CycleError(ValueError):
+    pass
+
+
+@dataclasses.dataclass(frozen=True)
+class Task:
+    """A single DAG node.
+
+    ``fn`` is the task code (shipped inside static schedules, like the
+    paper's pickled task code). ``args`` may contain ``TaskRef`` objects
+    (dependencies) and arbitrary literals.
+    """
+
+    key: str
+    fn: Callable[..., Any]
+    args: tuple[Any, ...] = ()
+    kwargs: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+
+    def dependencies(self) -> tuple[str, ...]:
+        deps = []
+        for a in list(self.args) + list(self.kwargs.values()):
+            if isinstance(a, TaskRef):
+                deps.append(a.key)
+        return tuple(dict.fromkeys(deps))  # stable-unique
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskRef:
+    """Reference to another task's output (an edge in the DAG)."""
+
+    key: str
+
+
+class DAG:
+    """Directed acyclic graph of tasks.
+
+    ``deps[k]``    — keys k reads from (in-edges).
+    ``children[k]``— keys that read k (out-edges).
+    ``leaves``     — tasks with no dependencies (paper: leaf nodes; one
+                     static schedule is generated per leaf).
+    ``roots``      — tasks nothing depends on (final outputs).
+    """
+
+    def __init__(self, tasks: Iterable[Task]):
+        self.tasks: dict[str, Task] = {}
+        for t in tasks:
+            if t.key in self.tasks:
+                raise ValueError(f"duplicate task key {t.key!r}")
+            self.tasks[t.key] = t
+        self.deps: dict[str, tuple[str, ...]] = {}
+        self.children: dict[str, list[str]] = {k: [] for k in self.tasks}
+        for k, t in self.tasks.items():
+            d = t.dependencies()
+            missing = [x for x in d if x not in self.tasks]
+            if missing:
+                raise ValueError(f"task {k!r} depends on missing keys {missing}")
+            self.deps[k] = d
+            for x in d:
+                self.children[x].append(k)
+        self.leaves: tuple[str, ...] = tuple(
+            k for k in self.tasks if not self.deps[k]
+        )
+        self.roots: tuple[str, ...] = tuple(
+            k for k in self.tasks if not self.children[k]
+        )
+        self._check_acyclic()
+
+    # -- construction ------------------------------------------------------
+    @classmethod
+    def from_dsk(cls, dsk: Mapping[str, Any]) -> "DAG":
+        """Build from a Dask-style graph dict."""
+        tasks = []
+        for key, spec in dsk.items():
+            if isinstance(spec, tuple) and spec and callable(spec[0]):
+                fn = spec[0]
+                args = tuple(
+                    TaskRef(a) if isinstance(a, str) and a in dsk else a
+                    for a in spec[1:]
+                )
+                tasks.append(Task(key, fn, args))
+            else:  # literal leaf
+                tasks.append(Task(key, _literal(spec)))
+        return cls(tasks)
+
+    # -- utilities ---------------------------------------------------------
+    def _check_acyclic(self) -> None:
+        order = self.topological_order()
+        if len(order) != len(self.tasks):
+            raise CycleError("task graph contains a cycle")
+
+    def topological_order(self) -> list[str]:
+        indeg = {k: len(self.deps[k]) for k in self.tasks}
+        stack = [k for k in self.tasks if indeg[k] == 0]
+        out: list[str] = []
+        while stack:
+            k = stack.pop()
+            out.append(k)
+            for c in self.children[k]:
+                indeg[c] -= 1
+                if indeg[c] == 0:
+                    stack.append(c)
+        return out
+
+    def reachable_from(self, start: str) -> set[str]:
+        """All nodes reachable from ``start`` following out-edges (paper:
+        the static schedule for leaf L contains every node reachable from
+        L)."""
+        seen = {start}
+        stack = [start]
+        while stack:
+            k = stack.pop()
+            for c in self.children[k]:
+                if c not in seen:
+                    seen.add(c)
+                    stack.append(c)
+        return seen
+
+    def fan_in_degree(self, key: str) -> int:
+        return len(self.deps[key])
+
+    def fan_out_degree(self, key: str) -> int:
+        return len(self.children[key])
+
+    def __len__(self) -> int:
+        return len(self.tasks)
+
+    def __contains__(self, key: str) -> bool:
+        return key in self.tasks
+
+    def critical_path_length(self) -> int:
+        depth: dict[str, int] = {}
+        for k in self.topological_order():
+            depth[k] = 1 + max((depth[d] for d in self.deps[k]), default=0)
+        return max(depth.values(), default=0)
+
+
+def _literal(value: Any) -> Callable[[], Any]:
+    def produce() -> Any:
+        return value
+
+    produce.__name__ = "literal"
+    return produce

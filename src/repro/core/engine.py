@@ -1,0 +1,516 @@
+"""DAG engines: WUKONG + every design iteration the paper compares against.
+
+Engines (paper §III's "journey from the serverful to the serverless"):
+
+- ``ServerfulEngine``  — the Dask-distributed stand-in: a centralized
+  scheduler with W long-lived workers and direct worker-to-worker data
+  transfer (no KV hop). "Dask (EC2)" is W large; "Dask (Laptop)" is W=4.
+- ``StrawmanEngine``   — centralized; one Lambda per task; completion ACK
+  over a per-Lambda TCP connection handled serially by the scheduler
+  (Fig. 1).
+- ``PubSubEngine``     — strawman + Redis pub/sub completion notifications
+  (Fig. 2).
+- ``ParallelInvokerEngine`` — pub/sub + a pool of dedicated invoker
+  processes (Fig. 3).
+- ``WukongEngine``     — decentralized static/dynamic scheduling (Fig. 5):
+  per-leaf static schedules, executor-local data locality, fan-in
+  dependency counters, become/invoke fan-outs, proxy for large fan-outs.
+
+All engines consume the same ``DAG`` (the paper could only compare against
+Dask because both shared a representation — §V-D; we keep that property
+for every baseline) and the same simulated FaaS cost model.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any
+
+from repro.core.dag import DAG, TaskRef
+from repro.core.executor import (
+    RESULTS_CHANNEL,
+    ExecutorContext,
+    TaskExecutor,
+    TaskMetrics,
+)
+from repro.core.faults import FaultConfig, FaultInjector, HeartbeatRegistry
+from repro.core.invoker import FanoutProxy, InvokerPool
+from repro.core.kvstore import CostModel, ShardedKVStore, sizeof
+from repro.core.schedule import generate_static_schedules
+
+
+class JobError(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    cost: CostModel = dataclasses.field(default_factory=CostModel)
+    faults: FaultConfig = dataclasses.field(default_factory=FaultConfig)
+    n_kv_shards: int = 10
+    colocate_kv_shards: bool = False      # §V-B factor: shards share one VM
+    counter_mode: str = "edge_set"         # or "paper" (plain INCR)
+    num_initial_invokers: int = 20         # scheduler-side leaf invokers
+    num_proxy_invokers: int = 20           # KV-proxy fan-out invokers
+    proxy_threshold: int = 8               # max_task_fanout
+    use_proxy: bool = True                 # §V-B factor
+    inline_fanout_args: bool = False       # beyond-paper locality opt
+    max_concurrency: int = 512             # simulated Lambda concurrency
+    speculative_poll_s: float = 0.01
+    job_timeout_s: float = 600.0
+
+
+@dataclasses.dataclass
+class JobReport:
+    results: dict[str, Any]
+    wall_s: float
+    tasks: int
+    executors_invoked: int
+    kv_stats: dict[str, int]
+    metrics: list[dict[str, Any]]
+    charged_ms: float
+
+
+class _ResultWaiter:
+    """Collects root results from the results channel, dedupes duplicates
+    (speculative executors may publish a root twice)."""
+
+    def __init__(self, kv: ShardedKVStore, roots: tuple[str, ...]):
+        self.kv = kv
+        self.roots = set(roots)
+        self.sub = kv.subscribe(RESULTS_CHANNEL)
+
+    def wait(self, timeout_s: float) -> dict[str, Any]:
+        done: set[str] = set()
+        deadline = time.monotonic() + timeout_s
+        while done != self.roots:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                raise JobError(
+                    f"job timed out; missing roots: {sorted(self.roots - done)}"
+                )
+            try:
+                msg = self.sub.get(timeout=min(remaining, 0.25))
+            except queue.Empty:
+                continue
+            if msg["type"] == "error":
+                raise JobError(f"task {msg['key']!r} failed: {msg['error']}")
+            if msg["key"] in self.roots:
+                done.add(msg["key"])
+        return {k: self.kv.get(k) for k in sorted(self.roots)}
+
+
+class WukongEngine:
+    """The decentralized engine (paper §IV)."""
+
+    def __init__(self, config: EngineConfig | None = None):
+        self.config = config or EngineConfig()
+
+    def compute(self, dag: DAG) -> JobReport:
+        cfg = self.config
+        kv = ShardedKVStore(
+            n_shards=cfg.n_kv_shards,
+            cost=cfg.cost,
+            colocate_shards=cfg.colocate_kv_shards,
+            counter_mode=cfg.counter_mode,
+        )
+        schedule_set = generate_static_schedules(dag)
+        # Storage Manager registers the fan-in counters at workflow start.
+        for cid, width in schedule_set.fan_in_counters().items():
+            kv.register_counter(cid, width)
+
+        metrics = TaskMetrics()
+        heartbeats = HeartbeatRegistry()
+        faults = FaultInjector(cfg.faults)
+        pool = ThreadPoolExecutor(max_workers=cfg.max_concurrency)
+        initial_invokers = InvokerPool(
+            cfg.num_initial_invokers, cfg.cost, kv.clock, pool, name="init"
+        )
+        proxy_invokers = InvokerPool(
+            cfg.num_proxy_invokers, cfg.cost, kv.clock, pool, name="proxy"
+        )
+        proxy = FanoutProxy(kv, proxy_invokers) if cfg.use_proxy else None
+
+        ctx: ExecutorContext | None = None
+
+        def spawn(start_key, seed_cache, schedule, width, attempt=0,
+                  parent=None):
+            assert ctx is not None
+            ship_ms = schedule.code_size_bytes / (
+                cfg.cost.schedule_ship_mbps * 1e6
+            ) * 1e3
+            body = _executor_body(ctx, schedule, start_key, seed_cache,
+                                  attempt, parent)
+            if proxy is not None and width >= cfg.proxy_threshold:
+                # Large fan-out: one pub/sub message offloads all the
+                # invocations to the proxy's parallel invoker pool.
+                kv.publish(FanoutProxy.CHANNEL, {"spawns": [body]})
+            else:
+                initial_invokers.submit(body, extra_ms=ship_ms)
+
+        ctx = ExecutorContext(
+            dag=dag,
+            kv=kv,
+            spawn=spawn,
+            faults=faults,
+            heartbeats=heartbeats,
+            metrics=metrics,
+            inline_fanout_args=cfg.inline_fanout_args,
+        )
+
+        waiter = _ResultWaiter(kv, dag.roots)
+        t0 = time.perf_counter()
+        # Initial Task Executor Invokers: one executor per static schedule,
+        # invoked in parallel (paper §IV-C).
+        for leaf, sched in schedule_set.schedules.items():
+            spawn(leaf, {}, sched, width=1)
+
+        stop_monitor = threading.Event()
+        monitor = threading.Thread(
+            target=_speculative_monitor,
+            args=(ctx, stop_monitor, cfg, schedule_set),
+            daemon=True,
+        )
+        monitor.start()
+        try:
+            results = waiter.wait(cfg.job_timeout_s)
+        finally:
+            stop_monitor.set()
+            initial_invokers.close()
+            proxy_invokers.close()
+            if proxy is not None:
+                proxy.close()
+            pool.shutdown(wait=False, cancel_futures=True)
+        wall = time.perf_counter() - t0
+        return JobReport(
+            results=results,
+            wall_s=wall,
+            tasks=len(dag),
+            executors_invoked=initial_invokers.invocations
+            + proxy_invokers.invocations,
+            kv_stats=kv.stats.snapshot(),
+            metrics=metrics.records,
+            charged_ms=kv.clock.charged_ms,
+        )
+
+
+def _executor_body(ctx, schedule, start_key, seed_cache, attempt, parent=None):
+    def body():
+        TaskExecutor(ctx, schedule, start_key, seed_cache, attempt,
+                     parent=parent).run()
+
+    return body
+
+
+def _speculative_monitor(ctx, stop, cfg, schedule_set):
+    """Re-invoke executors whose current task exceeds the straggler
+    threshold (beyond-paper straggler mitigation; safe via idempotence)."""
+    threshold_ms = cfg.faults.speculative_threshold_ms
+    if threshold_ms == float("inf"):
+        return
+    respawned: set[int] = set()
+    while not stop.wait(cfg.speculative_poll_s):
+        now = time.perf_counter()
+        for hb in ctx.heartbeats.inflight():
+            age_ms = (now - hb.started_at) * 1e3
+            scale = cfg.cost.time_scale or 1.0
+            if age_ms / scale > threshold_ms and hb.executor_id not in respawned:
+                respawned.add(hb.executor_id)
+                sched = _covering_schedule(schedule_set, hb.start_key)
+                if sched is not None:
+                    ctx.spawn(hb.start_key, {}, sched, width=1,
+                              attempt=1, parent=hb.parent)
+
+
+def _covering_schedule(schedule_set, key):
+    for sched in schedule_set.schedules.values():
+        if sched.covers(key):
+            return sched
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Centralized design iterations (paper §III, Figs. 1-3) and the serverful
+# baseline. They share a single implementation parameterized by the
+# completion-notification transport and the invoker parallelism.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CentralizedConfig:
+    cost: CostModel = dataclasses.field(default_factory=CostModel)
+    n_kv_shards: int = 10
+    colocate_kv_shards: bool = False
+    notification: str = "tcp"      # "tcp" (strawman) | "pubsub"
+    num_invokers: int = 1          # >1 = parallel-invoker version
+    max_concurrency: int = 512
+    job_timeout_s: float = 600.0
+
+
+class _CentralizedEngine:
+    """Centralized scheduler: tracks readiness, dispatches one Lambda per
+    task; Lambdas read inputs from / write outputs to the KV store and
+    notify the scheduler, which resolves dependents (Figs. 1-3)."""
+
+    name = "centralized"
+
+    def __init__(self, config: CentralizedConfig | None = None):
+        self.config = config or CentralizedConfig()
+
+    def compute(self, dag: DAG) -> JobReport:
+        cfg = self.config
+        kv = ShardedKVStore(
+            n_shards=cfg.n_kv_shards, cost=cfg.cost,
+            colocate_shards=cfg.colocate_kv_shards,
+        )
+        metrics = TaskMetrics()
+        pool = ThreadPoolExecutor(max_workers=cfg.max_concurrency)
+        invokers = InvokerPool(cfg.num_invokers, cfg.cost, kv.clock, pool)
+        done_q: "queue.Queue[tuple[str, Any]]" = queue.Queue()
+        inflight = [0]
+        inflight_lock = threading.Lock()
+
+        # Scheduler-side message handling is serialized (the §III-B
+        # bottleneck). TCP mode additionally pays a per-connection setup
+        # and an IRQ-flood term that grows with the number of Lambdas
+        # holding open connections (paper §III-C) — the reason pub/sub
+        # pulls ahead as tasks get longer and waves of completions pile up.
+        def per_msg_ms() -> float:
+            if cfg.notification != "tcp":
+                return cfg.cost.pubsub_msg_ms
+            with inflight_lock:
+                n = inflight[0]
+            return (cfg.cost.tcp_connect_ms
+                    + cfg.cost.tcp_msg_ms * (1.0 + cfg.cost.tcp_irq_factor * n))
+
+        def lambda_body(key: str):
+            def body():
+                with inflight_lock:
+                    inflight[0] += 1
+                try:
+                    task = dag.tasks[key]
+                    t0 = time.perf_counter()
+
+                    def resolve(a):
+                        return kv.get(a.key) if isinstance(a, TaskRef) else a
+
+                    args = [resolve(a) for a in task.args]
+                    kwargs = {k: resolve(v) for k, v in task.kwargs.items()}
+                    read_ms = (time.perf_counter() - t0) * 1e3
+                    t0 = time.perf_counter()
+                    out = task.fn(*args, **kwargs)
+                    compute_ms = (time.perf_counter() - t0) * 1e3
+                    t0 = time.perf_counter()
+                    kv.put(key, out)
+                    write_ms = (time.perf_counter() - t0) * 1e3
+                    metrics.record(
+                        task=key, event="executed", read_ms=read_ms,
+                        compute_ms=compute_ms, write_ms=write_ms,
+                        nbytes=sizeof(out),
+                    )
+                    done_q.put((key, None))
+                except Exception as exc:  # pragma: no cover - surfaced below
+                    done_q.put((key, exc))
+                finally:
+                    with inflight_lock:
+                        inflight[0] -= 1
+
+            return body
+
+        indeg = {k: len(dag.deps[k]) for k in dag.tasks}
+        t0 = time.perf_counter()
+        for k in dag.leaves:
+            invokers.submit(lambda_body(k))
+        remaining = set(dag.tasks)
+        deadline = time.monotonic() + cfg.job_timeout_s
+        try:
+            while remaining:
+                timeout = deadline - time.monotonic()
+                if timeout <= 0:
+                    raise JobError(f"timeout; remaining={len(remaining)}")
+                key, err = done_q.get(timeout=timeout)
+                if err is not None:
+                    raise JobError(f"task {key!r} failed: {err!r}")
+                kv.clock.charge(per_msg_ms())  # serialized scheduler handling
+                remaining.discard(key)
+                for child in dag.children[key]:
+                    indeg[child] -= 1
+                    if indeg[child] == 0:
+                        invokers.submit(lambda_body(child))
+        finally:
+            invokers.close()
+            pool.shutdown(wait=False, cancel_futures=True)
+        wall = time.perf_counter() - t0
+        return JobReport(
+            results={k: kv.get(k) for k in dag.roots},
+            wall_s=wall,
+            tasks=len(dag),
+            executors_invoked=invokers.invocations,
+            kv_stats=kv.stats.snapshot(),
+            metrics=metrics.records,
+            charged_ms=kv.clock.charged_ms,
+        )
+
+
+class StrawmanEngine(_CentralizedEngine):
+    """Fig. 1: per-Lambda TCP notifications, single invoker."""
+
+    name = "strawman"
+
+    def __init__(self, cost: CostModel | None = None, **kw: Any):
+        super().__init__(CentralizedConfig(
+            cost=cost or CostModel(), notification="tcp", num_invokers=1, **kw
+        ))
+
+
+class PubSubEngine(_CentralizedEngine):
+    """Fig. 2: pub/sub notifications, single invoker."""
+
+    name = "pubsub"
+
+    def __init__(self, cost: CostModel | None = None, **kw: Any):
+        super().__init__(CentralizedConfig(
+            cost=cost or CostModel(), notification="pubsub",
+            num_invokers=1, **kw
+        ))
+
+
+class ParallelInvokerEngine(_CentralizedEngine):
+    """Fig. 3: pub/sub + dedicated parallel invoker processes."""
+
+    name = "parallel_invoker"
+
+    def __init__(self, cost: CostModel | None = None, num_invokers: int = 20,
+                 **kw: Any):
+        super().__init__(CentralizedConfig(
+            cost=cost or CostModel(), notification="pubsub",
+            num_invokers=num_invokers, **kw
+        ))
+
+
+@dataclasses.dataclass(frozen=True)
+class ServerfulConfig:
+    cost: CostModel = dataclasses.field(default_factory=CostModel)
+    n_workers: int = 25            # paper EC2: 5 VMs x 5 worker processes
+    worker_bandwidth_mbps: float = 1000.0  # direct worker<->worker TCP
+    job_timeout_s: float = 600.0
+
+
+class ServerfulEngine:
+    """Dask-distributed stand-in: long-lived workers, centralized
+    scheduler, direct worker-to-worker transfers (no KV hop), finite
+    parallelism = n_workers. Locality-aware: tasks prefer the worker that
+    holds most of their input bytes (Dask's data-locality heuristic)."""
+
+    name = "serverful"
+
+    def __init__(self, config: ServerfulConfig | None = None):
+        self.config = config or ServerfulConfig()
+
+    def compute(self, dag: DAG) -> JobReport:
+        cfg = self.config
+        clock_cost = dataclasses.replace(cfg.cost)
+        kv = ShardedKVStore(n_shards=1, cost=clock_cost)  # clock + channels
+        metrics = TaskMetrics()
+        owner: dict[str, int] = {}        # task key -> worker that holds it
+        data: list[dict[str, Any]] = [dict() for _ in range(cfg.n_workers)]
+        owner_lock = threading.Lock()
+        done_q: "queue.Queue[tuple[str, Any]]" = queue.Queue()
+        pool = ThreadPoolExecutor(max_workers=cfg.n_workers)
+
+        def run_on_worker(key: str, wid: int):
+            def body():
+                try:
+                    task = dag.tasks[key]
+                    t0 = time.perf_counter()
+
+                    def resolve(a):
+                        if not isinstance(a, TaskRef):
+                            return a
+                        with owner_lock:
+                            src = owner[a.key]
+                            val = data[src][a.key]
+                        if src != wid:
+                            # direct TCP transfer between workers
+                            ms = sizeof(val) / (
+                                cfg.worker_bandwidth_mbps * 1e6) * 1e3
+                            kv.clock.charge(cfg.cost.tcp_msg_ms + ms)
+                        return val
+
+                    args = [resolve(a) for a in task.args]
+                    kwargs = {k: resolve(v) for k, v in task.kwargs.items()}
+                    read_ms = (time.perf_counter() - t0) * 1e3
+                    t0 = time.perf_counter()
+                    out = task.fn(*args, **kwargs)
+                    compute_ms = (time.perf_counter() - t0) * 1e3
+                    with owner_lock:
+                        data[wid][key] = out
+                        owner[key] = wid
+                    metrics.record(task=key, event="executed",
+                                   read_ms=read_ms, compute_ms=compute_ms,
+                                   write_ms=0.0, nbytes=sizeof(out))
+                    done_q.put((key, None))
+                except Exception as exc:
+                    done_q.put((key, exc))
+
+            return body
+
+        def pick_worker(key: str, rr: int) -> int:
+            # locality: the worker holding the most input bytes
+            best, best_bytes = rr % cfg.n_workers, -1
+            with owner_lock:
+                counts: dict[int, int] = {}
+                for dep in dag.deps[key]:
+                    w = owner.get(dep)
+                    if w is not None:
+                        counts[w] = counts.get(w, 0) + sizeof(data[w][dep])
+            for w, b in counts.items():
+                if b > best_bytes:
+                    best, best_bytes = w, b
+            return best
+
+        indeg = {k: len(dag.deps[k]) for k in dag.tasks}
+        t0 = time.perf_counter()
+        rr = 0
+        for k in dag.leaves:
+            pool.submit(run_on_worker(k, pick_worker(k, rr)))
+            rr += 1
+        remaining = set(dag.tasks)
+        deadline = time.monotonic() + cfg.job_timeout_s
+        try:
+            while remaining:
+                timeout = deadline - time.monotonic()
+                if timeout <= 0:
+                    raise JobError(f"timeout; remaining={len(remaining)}")
+                key, err = done_q.get(timeout=timeout)
+                if err is not None:
+                    raise JobError(f"task {key!r} failed: {err!r}")
+                kv.clock.charge(cfg.cost.tcp_msg_ms)  # scheduler handling
+                remaining.discard(key)
+                for child in dag.children[key]:
+                    indeg[child] -= 1
+                    if indeg[child] == 0:
+                        pool.submit(run_on_worker(child, pick_worker(child, rr)))
+                        rr += 1
+        finally:
+            pool.shutdown(wait=False, cancel_futures=True)
+        wall = time.perf_counter() - t0
+        with owner_lock:
+            results = {k: data[owner[k]][k] for k in dag.roots}
+        return JobReport(
+            results=results, wall_s=wall, tasks=len(dag),
+            executors_invoked=0, kv_stats=kv.stats.snapshot(),
+            metrics=metrics.records, charged_ms=kv.clock.charged_ms,
+        )
+
+
+ENGINES = {
+    "wukong": WukongEngine,
+    "strawman": StrawmanEngine,
+    "pubsub": PubSubEngine,
+    "parallel_invoker": ParallelInvokerEngine,
+    "serverful": ServerfulEngine,
+}

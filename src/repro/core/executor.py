@@ -1,0 +1,272 @@
+"""The decentralized Task Executor runtime (paper §IV-C).
+
+Each executor is one simulated Lambda invocation. It receives a static
+schedule start point and walks the DAG bottom-up along a single path:
+
+  1. *fan-in* at the current node (in-degree > 1): publish locally-held
+     input objects, atomically record this in-edge on the dependency
+     counter; the LAST arriver continues, everyone else stops. Nobody
+     waits — FaaS bills wall-clock, so waiting is money (paper §IV-C).
+  2. *execute* the current task, caching the output in executor-local
+     memory (data locality: a chain of tasks costs zero network I/O).
+  3. *fan-out*: width 1 is trivial (continue along the chain). Width n>1:
+     publish the output, *become* the executor of one out-edge and
+     *invoke* executors for the other n-1 (through the proxy when the
+     width crosses the proxy threshold).
+
+Fault tolerance: an injected failure aborts the invocation; the engine
+re-invokes the executor from its start point with a fresh local cache,
+exactly like AWS Lambda's automatic retry (≤ 2). Idempotent KV writes and
+edge-set counters make retries and speculative duplicates safe.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Callable
+
+from repro.core.dag import DAG, TaskRef
+from repro.core.faults import (
+    ExecutorHeartbeat,
+    FaultInjector,
+    HeartbeatRegistry,
+    SimulatedTaskFailure,
+)
+from repro.core.kvstore import ShardedKVStore, sizeof
+from repro.core.schedule import StaticSchedule, _counter_id
+
+RESULTS_CHANNEL = "__results__"
+
+
+class TaskMetrics:
+    """Per-task timing records for the Fig.13-style CDF breakdown."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self.records: list[dict[str, Any]] = []
+
+    def record(self, **kw: Any) -> None:
+        with self._lock:
+            self.records.append(kw)
+
+
+class ExecutorContext:
+    """Everything an executor needs from the engine (shared, read-mostly)."""
+
+    def __init__(
+        self,
+        dag: DAG,
+        kv: ShardedKVStore,
+        spawn: Callable[..., None],
+        faults: FaultInjector,
+        heartbeats: HeartbeatRegistry,
+        metrics: TaskMetrics,
+        inline_fanout_args: bool = False,
+        executed_counter: list[int] | None = None,
+    ):
+        self.dag = dag
+        self.kv = kv
+        self.spawn = spawn  # spawn(start_key, seed_cache, schedule, width)
+        self.faults = faults
+        self.heartbeats = heartbeats
+        self.metrics = metrics
+        self.inline_fanout_args = inline_fanout_args
+        self._id_lock = threading.Lock()
+        self._next_id = 0
+
+    def next_executor_id(self) -> int:
+        with self._id_lock:
+            self._next_id += 1
+            return self._next_id
+
+
+class TaskExecutor:
+    def __init__(
+        self,
+        ctx: ExecutorContext,
+        schedule: StaticSchedule,
+        start_key: str,
+        seed_cache: dict[str, Any] | None = None,
+        attempt: int = 0,
+        parent: str | None = None,
+    ):
+        self.ctx = ctx
+        self.schedule = schedule
+        self.start_key = start_key
+        self.seed_cache = dict(seed_cache or {})
+        self.attempt = attempt
+        # The in-edge this executor travels into its start node (set when
+        # invoked at a fan-out). Required so fan-in edge ids are unique per
+        # in-edge — two executors invoked into the same fan-in node from
+        # different parents must increment different edge ids.
+        self.parent = parent
+        self.executor_id = ctx.next_executor_id()
+        self.cache: dict[str, Any] = {}
+        self.tasks_executed = 0
+
+    # -- helpers -------------------------------------------------------------
+    def _edge_id(self, src: str, dst: str) -> str:
+        return f"{src}=>{dst}"
+
+    def _publish_local_deps_of(self, key: str) -> float:
+        """Publish locally-held objects that ``key`` depends on. Returns
+        simulated/wall ms spent writing."""
+        t0 = time.perf_counter()
+        for dep in self.ctx.dag.deps[key]:
+            if dep in self.cache:
+                self.ctx.kv.put_if_absent(dep, self.cache[dep])
+        return (time.perf_counter() - t0) * 1e3
+
+    def _gather_inputs(self, key: str) -> tuple[list[Any], dict[str, Any], float]:
+        task = self.ctx.dag.tasks[key]
+        t0 = time.perf_counter()
+
+        def resolve(a: Any) -> Any:
+            if isinstance(a, TaskRef):
+                if a.key in self.cache:
+                    return self.cache[a.key]  # data locality: no network
+                return self.ctx.kv.get(a.key)
+            return a
+
+        args = [resolve(a) for a in task.args]
+        kwargs = {k: resolve(v) for k, v in task.kwargs.items()}
+        return args, kwargs, (time.perf_counter() - t0) * 1e3
+
+    # -- the walk -------------------------------------------------------------
+    def run(self) -> None:
+        hb = ExecutorHeartbeat(
+            executor_id=self.executor_id,
+            start_key=self.start_key,
+            current_key=self.start_key,
+            started_at=time.perf_counter(),
+            parent=self.parent,
+        )
+        self.ctx.heartbeats.beat(hb)
+        try:
+            self._walk()
+        except SimulatedTaskFailure:
+            if self.attempt < self.ctx.faults.config.max_retries:
+                # Lambda automatic retry: fresh container, same event payload.
+                self.ctx.spawn(
+                    self.start_key,
+                    dict(self.seed_cache),
+                    self.schedule,
+                    width=1,
+                    attempt=self.attempt + 1,
+                    parent=self.parent,
+                )
+            else:
+                self.ctx.kv.publish(
+                    RESULTS_CHANNEL,
+                    {"type": "error", "key": self.start_key,
+                     "error": "task failed after max retries"},
+                )
+        except Exception as exc:  # task-code bug: fail the job loudly
+            self.ctx.kv.publish(
+                RESULTS_CHANNEL,
+                {"type": "error", "key": self.start_key, "error": repr(exc)},
+            )
+        finally:
+            self.ctx.heartbeats.done(self.executor_id)
+
+    def _walk(self) -> None:
+        dag = self.ctx.dag
+        kv = self.ctx.kv
+        self.cache.update(self.seed_cache)
+        current = self.start_key
+        prev: str | None = self.parent
+
+        while True:
+            # ---- fan-in operation (paper §IV-C) --------------------------
+            indeg = len(dag.deps[current])
+            if indeg > 1:
+                write_ms = self._publish_local_deps_of(current)
+                edge = self._edge_id(prev or "__leaf__", current)
+                count = kv.increment_dependency(_counter_id(current), edge)
+                if count < indeg:
+                    # Some dependencies unsatisfied: store outputs and STOP.
+                    # (Never wait: Lambda bills wait time, paper §IV-C.)
+                    self.ctx.metrics.record(
+                        task=current, event="fanin_stop", write_ms=write_ms,
+                        executor=self.executor_id,
+                    )
+                    return
+                # Last arriver: continue through the fan-in.
+
+            # ---- task execution ------------------------------------------
+            if not self.schedule.covers(current):
+                raise AssertionError(
+                    f"executor schedule {self.schedule.leaf!r} does not "
+                    f"cover task {current!r}"
+                )
+            args, kwargs, read_ms = self._gather_inputs(current)
+            hb = ExecutorHeartbeat(
+                executor_id=self.executor_id,
+                start_key=self.start_key,
+                current_key=current,
+                started_at=time.perf_counter(),
+                parent=self.parent,
+            )
+            self.ctx.heartbeats.beat(hb)
+
+            if self.ctx.faults.should_fail(current, self.attempt):
+                raise SimulatedTaskFailure(current)
+            straggle = self.ctx.faults.straggle_ms(current, self.attempt)
+            if straggle > 0:
+                kv.clock.charge(straggle)
+
+            t0 = time.perf_counter()
+            out = dag.tasks[current].fn(*args, **kwargs)
+            compute_ms = (time.perf_counter() - t0) * 1e3
+            self.cache[current] = out
+            self.tasks_executed += 1
+
+            children = dag.children[current]
+            # ---- sink: final result --------------------------------------
+            if not children:
+                t0 = time.perf_counter()
+                kv.put_if_absent(current, out)
+                write_ms = (time.perf_counter() - t0) * 1e3
+                kv.publish(
+                    RESULTS_CHANNEL,
+                    {"type": "result", "key": current},
+                )
+                self.ctx.metrics.record(
+                    task=current, event="executed", read_ms=read_ms,
+                    compute_ms=compute_ms, write_ms=write_ms,
+                    nbytes=sizeof(out), executor=self.executor_id,
+                )
+                return
+
+            self.ctx.metrics.record(
+                task=current, event="executed", read_ms=read_ms,
+                compute_ms=compute_ms, write_ms=0.0, nbytes=sizeof(out),
+                executor=self.executor_id,
+            )
+
+            # ---- fan-out operation (paper §IV-C) -------------------------
+            if len(children) == 1:
+                prev, current = current, children[0]  # trivial fan-out
+                continue
+
+            become, *invoked = children
+            write_ms = 0.0
+            if not self.ctx.inline_fanout_args:
+                # Intermediate outputs needed by the new executors go to the
+                # KV store; invoked executors receive the keys (paper §IV-C).
+                t0 = time.perf_counter()
+                kv.put_if_absent(current, out)
+                write_ms = (time.perf_counter() - t0) * 1e3
+                seed: dict[str, Any] = {}
+            else:
+                # Beyond-paper optimization: carry the value inline with the
+                # invocation payload (fan-in republish keeps correctness).
+                seed = {current: out}
+            for child in invoked:
+                self.ctx.spawn(child, dict(seed), self.schedule,
+                               width=len(invoked), parent=current)
+            self.ctx.metrics.record(
+                task=current, event="fanout", width=len(children),
+                write_ms=write_ms, executor=self.executor_id,
+            )
+            prev, current = current, become

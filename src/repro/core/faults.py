@@ -1,0 +1,89 @@
+"""Failure / straggler injection and retry policy.
+
+The paper relies on AWS Lambda's automatic retry (up to two retries of a
+failed function execution, §IV-C) and explicitly lists stragglers as an
+open problem (§II-A "functions suffer from the straggler issues").
+
+We implement both:
+- bounded automatic retry of a failed Task Executor (re-invoked from its
+  schedule start point, paying invocation cost again),
+- speculative duplicate execution for stragglers (a monitor re-invokes an
+  executor whose current task has run far beyond the observed median).
+Both are safe because KV writes are ``put_if_absent`` and fan-in counters
+are idempotent edge-sets (kvstore.py), so a duplicate executor can never
+double-fire a fan-in or clobber a result — this robustness is a
+beyond-paper contribution (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+import threading
+
+
+class SimulatedTaskFailure(RuntimeError):
+    """Injected Lambda execution failure."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    task_failure_prob: float = 0.0   # per task attempt
+    max_retries: int = 2             # AWS Lambda automatic retry limit
+    straggler_prob: float = 0.0      # per task attempt
+    straggler_slowdown_ms: float = 0.0
+    speculative_threshold_ms: float = float("inf")  # re-invoke beyond this
+    seed: int = 0
+
+
+class FaultInjector:
+    """Deterministic-per-(task, attempt) fault decisions."""
+
+    def __init__(self, config: FaultConfig):
+        self.config = config
+        self._lock = threading.Lock()
+
+    def _rng(self, task_key: str, attempt: int) -> random.Random:
+        return random.Random((self.config.seed, task_key, attempt).__hash__())
+
+    def should_fail(self, task_key: str, attempt: int) -> bool:
+        if self.config.task_failure_prob <= 0:
+            return False
+        return self._rng(task_key, attempt).random() < self.config.task_failure_prob
+
+    def straggle_ms(self, task_key: str, attempt: int) -> float:
+        if self.config.straggler_prob <= 0:
+            return 0.0
+        rng = self._rng(task_key, attempt)
+        rng.random()  # decorrelate from should_fail
+        if rng.random() < self.config.straggler_prob:
+            return self.config.straggler_slowdown_ms
+        return 0.0
+
+
+@dataclasses.dataclass
+class ExecutorHeartbeat:
+    executor_id: int
+    start_key: str
+    current_key: str
+    started_at: float
+    parent: str | None = None
+
+
+class HeartbeatRegistry:
+    """Tracks in-flight executors for the speculative straggler monitor."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._beats: dict[int, ExecutorHeartbeat] = {}
+
+    def beat(self, hb: ExecutorHeartbeat) -> None:
+        with self._lock:
+            self._beats[hb.executor_id] = hb
+
+    def done(self, executor_id: int) -> None:
+        with self._lock:
+            self._beats.pop(executor_id, None)
+
+    def inflight(self) -> list[ExecutorHeartbeat]:
+        with self._lock:
+            return list(self._beats.values())

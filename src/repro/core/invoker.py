@@ -1,0 +1,122 @@
+"""Lambda invocation machinery: parallel invoker pool + large-fan-out proxy.
+
+Invoking an AWS Lambda costs ~50 ms through boto3 (paper §III-C), so
+invocation throughput is governed by how many invoker processes issue
+calls concurrently:
+
+- The scheduler's *Initial Task Executor Invokers* launch one executor per
+  static schedule, in parallel (paper §IV-C).
+- A Task Executor performing a *small* fan-out makes its own invocations.
+- A fan-out wider than ``proxy_threshold`` publishes one message to the
+  KV Store Proxy, whose Fan-out Invokers make the invocations in parallel
+  (paper §IV-D "Large Fan-out Task Invocations").
+
+Each invoker lane charges ``invoke_ms`` serially per call; P lanes give P×
+invocation throughput — the (near-)linear speedup of §III-C.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Callable
+
+from repro.core.kvstore import Clock, CostModel
+
+
+class InvokerPool:
+    """N invoker lanes; each lane issues invocations serially at invoke_ms.
+
+    ``submit`` enqueues an invocation request; a free lane picks it up,
+    charges the invocation API latency (plus cold-start when the warm pool
+    misses), then hands the executor body to the runtime thread pool.
+    """
+
+    def __init__(
+        self,
+        n_invokers: int,
+        cost: CostModel,
+        clock: Clock,
+        runtime_pool: ThreadPoolExecutor,
+        name: str = "invoker",
+    ):
+        self.cost = cost
+        self.clock = clock
+        self.runtime_pool = runtime_pool
+        self._q: "queue.Queue[tuple[Callable[[], Any], float] | None]" = queue.Queue()
+        self._lanes = [
+            threading.Thread(target=self._lane, name=f"{name}-{i}", daemon=True)
+            for i in range(max(1, n_invokers))
+        ]
+        self.invocations = 0
+        self._lock = threading.Lock()
+        self._closed = False
+        for t in self._lanes:
+            t.start()
+
+    def _lane(self) -> None:
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            body, extra_ms = item
+            # Invocation API latency is paid serially per lane.
+            self.clock.charge(self.cost.invoke_ms + extra_ms)
+            with self._lock:
+                self.invocations += 1
+            try:
+                self.runtime_pool.submit(body)
+            except RuntimeError:
+                # Runtime already shut down: the job has resolved; late
+                # (retry/speculative) invocations are safe to drop.
+                return
+
+    def submit(self, body: Callable[[], Any], extra_ms: float = 0.0) -> None:
+        if self._closed:
+            return  # job resolved; drop late invocations (idempotent)
+        self._q.put((body, extra_ms))
+
+    def close(self) -> None:
+        self._closed = True
+        for _ in self._lanes:
+            self._q.put(None)
+
+
+class FanoutProxy:
+    """KV Store Proxy: parallelizes large fan-outs (paper §IV-D).
+
+    The executor publishes a fan-out message (fan-out id + payload keys)
+    on the proxy channel; the proxy resolves the out-edges from the DAG it
+    received at workflow start and issues the invocations through its own
+    Fan-out Invoker pool.
+    """
+
+    CHANNEL = "__proxy__/fanout"
+
+    def __init__(self, kv, invokers: InvokerPool):
+        self.kv = kv
+        self.invokers = invokers
+        self._sub = kv.subscribe(self.CHANNEL)
+        self._thread = threading.Thread(
+            target=self._serve, name="kv-proxy", daemon=True
+        )
+        self._stop = threading.Event()
+        self.handled_fanouts = 0
+        self._thread.start()
+
+    def _serve(self) -> None:
+        while not self._stop.is_set():
+            try:
+                msg = self._sub.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            if msg is None:
+                return
+            spawn_fns = msg["spawns"]  # list of zero-arg callables
+            self.handled_fanouts += 1
+            for fn in spawn_fns:
+                self.invokers.submit(fn)
+
+    def close(self) -> None:
+        self._stop.set()
+        self.kv.publish(self.CHANNEL, None)

@@ -1,0 +1,7 @@
+from repro.data.pipeline import (
+    DataConfig,
+    TokenPipeline,
+    pack_documents,
+)
+
+__all__ = ["DataConfig", "TokenPipeline", "pack_documents"]

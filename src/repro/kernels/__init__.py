@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the LM payload hot-spots.
+
+Each kernel ships three files: <name>.py (pl.pallas_call + BlockSpec),
+ops.py (jitted wrapper), ref.py (pure-jnp oracle). The paper itself has
+no kernel-level contribution (it is a scheduling paper); these kernels
+serve the assigned-architecture payloads (DESIGN.md §2).
+"""

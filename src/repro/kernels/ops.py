@@ -1,0 +1,48 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+On the TPU target these run compiled (``interpret=False``); in this CPU
+container they run in interpret mode, validated against ``ref.py``. The
+wrappers pad ragged shapes up to block multiples and handle layout.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decode_attention as _dec
+from repro.kernels import flash_attention as _fa
+from repro.kernels import linear_attention as _la
+
+_ON_TPU = jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window",
+                                             "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal=True, window=None,
+                    block_q=128, block_k=128):
+    S = q.shape[1]
+    bq, bk = min(block_q, S), min(block_k, S)
+    pad = (-S) % bq
+    if pad:
+        cfg = [(0, 0), (0, pad), (0, 0), (0, 0)]
+        q, k, v = (jnp.pad(t, cfg) for t in (q, k, v))
+    out = _fa.flash_attention(q, k, v, causal=causal, window=window,
+                              block_q=bq, block_k=bk,
+                              interpret=not _ON_TPU)
+    return out[:, :S] if pad else out
+
+
+@functools.partial(jax.jit, static_argnames=("block_k",))
+def decode_attention(q, k_cache, v_cache, kv_len, *, block_k=512):
+    return _dec.decode_attention(q, k_cache, v_cache, kv_len,
+                                 block_k=min(block_k, k_cache.shape[1]),
+                                 interpret=not _ON_TPU)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def mlstm_chunk(q, k, v, log_f, i_gate, *, chunk=64):
+    return _la.mlstm_chunk(q, k, v, log_f, i_gate,
+                           chunk=min(chunk, q.shape[1]),
+                           interpret=not _ON_TPU)

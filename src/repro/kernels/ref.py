@@ -1,0 +1,100 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(
+    q: jax.Array,            # (B, S, H, hd)
+    k: jax.Array,            # (B, S, K, hd)
+    v: jax.Array,            # (B, S, K, hd)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+) -> jax.Array:
+    B, Sq, H, hd = q.shape
+    Skv, K = k.shape[1], k.shape[2]
+    G = H // K
+    qg = q.reshape(B, Sq, K, G, hd)
+    logits = jnp.einsum("bskgh,btkh->bkgst", qg, k,
+                        preferred_element_type=jnp.float32) * (hd ** -0.5)
+    qpos = jnp.arange(Sq)
+    kpos = jnp.arange(Skv)
+    mask = jnp.ones((Sq, Skv), dtype=bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v)
+    return out.reshape(B, Sq, H, hd)
+
+
+def decode_attention_ref(
+    q: jax.Array,            # (B, H, hd) — one new token per sequence
+    k_cache: jax.Array,      # (B, S, K, hd)
+    v_cache: jax.Array,      # (B, S, K, hd)
+    kv_len: jax.Array,       # (B,) int32 — valid prefix length
+) -> jax.Array:
+    B, H, hd = q.shape
+    S, K = k_cache.shape[1], k_cache.shape[2]
+    G = H // K
+    qg = q.reshape(B, K, G, hd)
+    logits = jnp.einsum("bkgh,bskh->bkgs", qg, k_cache,
+                        preferred_element_type=jnp.float32) * (hd ** -0.5)
+    mask = jnp.arange(S)[None, :] < kv_len[:, None]        # (B, S)
+    logits = jnp.where(mask[:, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", probs,
+                     v_cache.astype(jnp.float32))
+    return out.reshape(B, H, hd).astype(q.dtype)
+
+
+def mlstm_chunk_ref(
+    q: jax.Array,            # (B, S, H, hd) fp32
+    k: jax.Array,
+    v: jax.Array,
+    log_f: jax.Array,        # (B, S, H) log forget gates (<= 0)
+    i_gate: jax.Array,       # (B, S, H) input gates in (0, 1]
+    chunk: int = 64,
+) -> jax.Array:
+    """Chunkwise mLSTM / gated-linear-attention oracle (matches
+    repro.models.ssm.mlstm's inner math, zero initial state)."""
+    B, S, H, hd = q.shape
+    assert S % chunk == 0
+    n = S // chunk
+
+    def rc(t, extra):
+        return t.reshape((B, n, chunk) + extra).swapaxes(0, 1)
+
+    qs, ks, vs = rc(q, (H, hd)), rc(k, (H, hd)), rc(v, (H, hd))
+    fs, is_ = rc(log_f, (H,)), rc(i_gate, (H,))
+    C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    n0 = jnp.zeros((B, H, hd), jnp.float32)
+
+    def step(carry, inp):
+        C, nv = carry
+        qc, kc, vc, fc, ic = inp
+        fcum = jnp.cumsum(fc, axis=1)
+        ftot = fcum[:, -1]
+        decay_q = jnp.exp(fcum)
+        y_inter = jnp.einsum("bshk,bhkv->bshv", qc * decay_q[..., None], C)
+        n_inter = jnp.einsum("bshk,bhk->bsh", qc * decay_q[..., None], nv)
+        rel = fcum[:, :, None, :] - fcum[:, None, :, :]
+        mask = jnp.tril(jnp.ones((chunk, chunk), dtype=bool))
+        D = jnp.where(mask[None, :, :, None], jnp.exp(rel), 0.0)
+        D = D * ic[:, None, :, :]
+        scores = jnp.einsum("bshk,bthk->bsth", qc, kc) * D
+        y = y_inter + jnp.einsum("bsth,bthv->bshv", scores, vc)
+        nrm = n_inter + jnp.einsum("bsth->bsh", scores)
+        y = y / jnp.maximum(jnp.abs(nrm)[..., None], 1.0)
+        decay_k = jnp.exp(ftot[:, None, :] - fcum)
+        kv = jnp.einsum("bshk,bshv->bhkv", kc * (ic * decay_k)[..., None], vc)
+        ksum = jnp.einsum("bshk->bhk", kc * (ic * decay_k)[..., None])
+        return (jnp.exp(ftot)[..., None, None] * C + kv,
+                jnp.exp(ftot)[..., None] * nv + ksum), y
+
+    _, ys = jax.lax.scan(step, (C0, n0), (qs, ks, vs, fs, is_))
+    return ys.swapaxes(0, 1).reshape(B, S, H, hd)

@@ -1,0 +1,402 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this:
+  1. builds abstract params / optimizer state / cache (ShapeDtypeStruct,
+     no allocation),
+  2. resolves shardings from the logical-axis rules,
+  3. ``jax.jit(step, in_shardings, out_shardings).lower(...).compile()``
+     on the production mesh (single-pod 16x16 and multi-pod 2x16x16),
+  4. records memory_analysis, cost_analysis (HLO FLOPs/bytes), and the
+     collective-bytes tally parsed from the optimized HLO
+     (``compiled.as_text()`` — collectives only exist post-SPMD).
+
+Results go to ``benchmarks/results/dryrun/*.json`` for the roofline
+report. Any failure here (sharding mismatch, OOM at compile, unsupported
+collective) is a bug in the system.
+
+Usage:
+  python -m repro.launch.dryrun --arch smollm_360m --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--variant fsdp=0,...]
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_config
+from repro.launch import mesh as mesh_lib
+from repro.models import model as M
+from repro.models.config import ModelConfig, SHAPES, applicable_shapes
+from repro.optim import AdamWConfig, adamw_init
+from repro.runtime import serve as serve_lib
+from repro.runtime import train as train_lib
+from repro.runtime import sharding as sh
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__),
+                           "../../../benchmarks/results/dryrun")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum the sizes of all typed shapes in an HLO result declaration."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Bytes moved per collective kind, from optimized HLO.
+
+    For each collective instruction we take the result-shape size (for
+    all-gather that is the gathered output; for reduce-scatter the
+    scattered output; a standard, conservative proxy for wire bytes).
+    """
+    out: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    counts: dict[str, int] = {k + "_count": 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"^(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+"
+                     r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                     r"collective-permute)(?:-start|-done)?\(", line)
+        if not m:
+            continue
+        shape_txt, kind = m.group(1), m.group(2)
+        if "-done(" in line:
+            continue  # counted at -start
+        out[kind] += _shape_bytes(shape_txt)
+        counts[kind + "_count"] += 1
+    out.update(counts)
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+@dataclasses.dataclass
+class Variant:
+    """A sharding/step configuration under test (§Perf hillclimb knobs)."""
+    fsdp: bool | None = None          # None = auto (>=10B params)
+    shard_kv_seq: bool = True         # SP for decode caches
+    expert_parallel: bool = True
+    n_microbatches: int = 1
+    remat: bool | None = None         # None = config default
+    unroll_layers: bool = False       # exact HLO cost (roofline runs)
+    tensor_parallel: bool = True      # False: replicate weights, go pure DP
+    window: int | None = None         # override attention window (SWA)
+    shard_logits: bool = False        # keep prefill logits vocab-sharded
+    moe_group: int | None = None      # MoE dispatch group size override
+    grad_compress: str | None = None  # "bf16": halve grad-reduce bytes
+    tag: str = "baseline"
+
+
+def _fsdp_auto(cfg: ModelConfig) -> bool:
+    return cfg.param_counts()["total"] >= 10e9
+
+
+def build_cell(cfg: ModelConfig, shape_name: str, mesh, variant: Variant):
+    """Returns (jitted_fn, example_args, meta) ready to lower."""
+    shape = SHAPES[shape_name]
+    fsdp = variant.fsdp if variant.fsdp is not None else _fsdp_auto(cfg)
+    if variant.remat is not None:
+        cfg = dataclasses.replace(cfg, remat=variant.remat)
+    if variant.unroll_layers:
+        cfg = dataclasses.replace(cfg, scan_layers=False)
+    if variant.window is not None:
+        cfg = dataclasses.replace(cfg, sliding_window=variant.window)
+    if variant.moe_group is not None:
+        cfg = dataclasses.replace(cfg, moe_group=variant.moe_group)
+    rules = sh.rules_for(mesh, fsdp=fsdp,
+                         shard_kv_seq=variant.shard_kv_seq,
+                         expert_parallel=variant.expert_parallel,
+                         tensor_parallel=variant.tensor_parallel)
+
+    aparams = M.abstract_params(cfg)
+    specs = M.model_specs(cfg)
+    param_sh = sh.tree_shardings(aparams, specs, mesh, rules)
+
+    if shape.kind == "train":
+        aopt = jax.eval_shape(adamw_init, aparams)
+        opt_specs = {"mu": specs, "nu": specs, "count": ()}
+        opt_sh = sh.tree_shardings(aopt, opt_specs, mesh, rules)
+        abatch = train_lib.synthetic_batch(
+            cfg, shape.global_batch, shape.seq_len, abstract=True)
+        batch_sh = jax.tree.map(
+            lambda a: sh.batch_sharding(mesh, a.ndim, a.shape[0]), abatch)
+        step = train_lib.build_train_step(
+            cfg, AdamWConfig(grad_compress=variant.grad_compress),
+            n_microbatches=variant.n_microbatches)
+        fn = jax.jit(
+            step,
+            in_shardings=(param_sh, opt_sh, batch_sh),
+            out_shardings=(param_sh, opt_sh, None),
+            donate_argnums=(0, 1),
+        )
+        args = (aparams, aopt, abatch)
+    elif shape.kind == "prefill":
+        abatch = train_lib.synthetic_batch(
+            cfg, shape.global_batch, shape.seq_len, abstract=True)
+        batch_sh = jax.tree.map(
+            lambda a: sh.batch_sharding(mesh, a.ndim, a.shape[0]), abatch)
+
+        def prefill(params, batch):
+            return M.forward(params, cfg, batch["tokens"],
+                             batch.get("enc_embeds"))
+
+        if variant.shard_logits:
+            # keep prefill logits vocab-sharded (consumers — sampling,
+            # loss — reduce over vocab anyway; gathering the full-vocab
+            # logits tensor is a pure waste of interconnect)
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            out_sh = NamedSharding(
+                mesh, P(sh.batch_axes(mesh)
+                        if shape.global_batch
+                        % sh._axis_size(mesh, sh.batch_axes(mesh)) == 0
+                        else None, None, "model"))
+        else:
+            out_sh = sh.batch_sharding(mesh, 3, shape.global_batch)
+        fn = jax.jit(prefill, in_shardings=(param_sh, batch_sh),
+                     out_shardings=out_sh)
+        args = (aparams, abatch)
+    else:  # decode
+        acache = M.init_cache(cfg, shape.global_batch, shape.seq_len,
+                              abstract=True)
+        cache_specs = M.cache_specs(cfg)
+        cache_sh = sh.tree_shardings(acache, cache_specs, mesh, rules)
+        ainp = serve_lib.decode_inputs(cfg, shape.global_batch,
+                                       shape.seq_len, abstract=True)
+        inp_sh = {"token": sh.batch_sharding(mesh, 1, shape.global_batch),
+                  "pos": sh.replicated(mesh)}
+        step = serve_lib.build_serve_step(cfg)
+        fn = jax.jit(step, in_shardings=(param_sh, cache_sh, inp_sh),
+                     out_shardings=(sh.batch_sharding(
+                         mesh, 2, shape.global_batch), cache_sh),
+                     donate_argnums=(1,))
+        args = (aparams, acache, ainp)
+    meta = {"fsdp": fsdp, "variant": dataclasses.asdict(variant)}
+    return fn, args, meta
+
+
+def _cell_metrics(fn, args, mesh) -> dict:
+    with mesh:
+        lowered = fn.lower(*args)
+        compiled = lowered.compile()
+    cost = compiled.cost_analysis() or {}
+    coll = parse_collective_bytes(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        "collective_bytes": coll,
+    }
+
+
+def _metric_diff(a: dict, b: dict) -> dict:
+    out = {
+        "flops": a["flops"] - b["flops"],
+        "bytes_accessed": a["bytes_accessed"] - b["bytes_accessed"],
+        "collective_bytes": {
+            k: a["collective_bytes"][k] - b["collective_bytes"][k]
+            for k in a["collective_bytes"]
+        },
+    }
+    return out
+
+
+def _metric_addmul(base: dict, body: dict, times: float) -> dict:
+    return {
+        "flops": base["flops"] + times * body["flops"],
+        "bytes_accessed": base["bytes_accessed"]
+        + times * body["bytes_accessed"],
+        "collective_bytes": {
+            k: base["collective_bytes"][k] + times * body["collective_bytes"][k]
+            for k in base["collective_bytes"]
+        },
+    }
+
+
+def depth_probe(cfg: ModelConfig, shape_name: str, mesh,
+                variant: Variant) -> dict:
+    """Exact per-device HLO cost, derived from compiled artifacts.
+
+    XLA's cost analysis counts a ``while`` (scan) body once, so the
+    full scanned model under-reports. We compile UNROLLED models at 1 and
+    2 super-block repeats; the difference is the exact per-super-block
+    cost and collective footprint, and
+        total = outside + n_repeats * body
+    reconstructs the full-depth numbers (for enc-dec, a third probe
+    separates the encoder body). Inner *sequence* scans (Mamba chunk
+    scan, sLSTM time scan) remain rolled here; benchmarks/roofline.py
+    applies the documented analytic correction for those.
+    """
+    period = cfg.pattern_period
+    pvariant = dataclasses.replace(variant, unroll_layers=True)
+
+    def metrics_at(r_dec: int, r_enc: int) -> dict:
+        c = dataclasses.replace(
+            cfg, n_layers=period * r_dec,
+            n_enc_layers=(r_enc if cfg.enc_dec else 0))
+        fn, args, _ = build_cell(c, shape_name, mesh, pvariant)
+        return _cell_metrics(fn, args, mesh)
+
+    m11 = metrics_at(1, 1)
+    m21 = metrics_at(2, 1)
+    body_dec = _metric_diff(m21, m11)
+    derived = _metric_addmul(m11, body_dec, cfg.n_repeats - 1)
+    probes = {"r1": m11, "r2": m21, "body": body_dec}
+    if cfg.enc_dec:
+        m12 = metrics_at(1, 2)
+        body_enc = _metric_diff(m12, m11)
+        derived = _metric_addmul(derived, body_enc, cfg.n_enc_layers - 1)
+        probes["body_enc"] = body_enc
+    probes["derived"] = derived
+    return probes
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             variant: Variant | None = None, verbose: bool = True,
+             save: bool = True, probe: bool = False) -> dict:
+    variant = variant or Variant()
+    cfg = get_config(arch)
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    t0 = time.time()
+    record: dict = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": n_chips, "variant": variant.tag,
+    }
+    try:
+        fn, args, meta = build_cell(cfg, shape_name, mesh, variant)
+        record.update(meta)
+        with mesh:
+            lowered = fn.lower(*args)
+            t1 = time.time()
+            compiled = lowered.compile()
+            t2 = time.time()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        coll = parse_collective_bytes(hlo)
+        record.update({
+            "ok": True,
+            "lower_s": round(t1 - t0, 2),
+            "compile_s": round(t2 - t1, 2),
+            "flops": float(cost.get("flops", -1)) if cost else -1.0,
+            "bytes_accessed": float(cost.get("bytes accessed", -1))
+            if cost else -1.0,
+            "collective_bytes": coll,
+            "memory_analysis": _mem_dict(mem),
+            "hlo_bytes": len(hlo),
+        })
+        if probe:
+            record["probe"] = depth_probe(cfg, shape_name, mesh, variant)
+        if verbose:
+            print(f"[OK] {arch} {shape_name} {record['mesh']} "
+                  f"variant={variant.tag} "
+                  f"lower {record['lower_s']}s compile {record['compile_s']}s")
+            print(f"     memory_analysis: {record['memory_analysis']}")
+            print(f"     cost_analysis: flops={record['flops']:.3e} "
+                  f"bytes={record['bytes_accessed']:.3e}")
+            print(f"     collectives: { {k: v for k, v in coll.items() if v} }")
+            if probe:
+                d = record["probe"]["derived"]
+                print(f"     derived/device: flops={d['flops']:.3e} "
+                      f"bytes={d['bytes_accessed']:.3e} "
+                      f"coll={d['collective_bytes']['total']:.3e}")
+    except Exception as exc:
+        record.update({"ok": False, "error": repr(exc),
+                       "traceback": traceback.format_exc()})
+        if verbose:
+            print(f"[FAIL] {arch} {shape_name} {record['mesh']}: {exc!r}")
+    if save:
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        fname = (f"{arch}__{shape_name}__{record['mesh']}"
+                 f"__{variant.tag}.json")
+        with open(os.path.join(RESULTS_DIR, fname), "w") as f:
+            json.dump(record, f, indent=2)
+    return record
+
+
+def _mem_dict(mem) -> dict:
+    if mem is None:
+        return {}
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes"):
+        v = getattr(mem, attr, None)
+        if v is not None:
+            out[attr] = int(v)
+    return out
+
+
+def parse_variant(s: str) -> Variant:
+    v = Variant(tag=s or "baseline")
+    if not s or s == "baseline":
+        return v
+    kw: dict = {"tag": s}
+    for part in s.split(","):
+        k, _, val = part.partition("=")
+        if k in ("fsdp", "shard_kv_seq", "expert_parallel", "remat",
+                 "unroll_layers", "tensor_parallel", "shard_logits"):
+            kw[k] = bool(int(val))
+        elif k in ("n_microbatches", "window", "moe_group"):
+            kw[k] = int(val)
+        elif k == "grad_compress":
+            kw[k] = val
+    return Variant(**kw)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--probe", action="store_true",
+                    help="depth-probe for exact per-device HLO cost")
+    args = ap.parse_args()
+
+    variant = parse_variant(args.variant)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    archs = ARCHS if (args.all or not args.arch) else [args.arch]
+    n_ok = n_fail = 0
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = ([args.shape] if args.shape
+                  else applicable_shapes(cfg))
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_cell(arch, shape, mp, variant, probe=args.probe)
+                n_ok += rec["ok"]
+                n_fail += not rec["ok"]
+    print(f"\ndry-run complete: {n_ok} ok, {n_fail} failed")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state. Single pod: 16x16 = 256 chips (TPU v5e pod),
+axes ("data", "model"). Multi-pod: 2 pods = 512 chips, axes
+("pod", "data", "model") — the pod axis carries pure data parallelism
+(DCN-friendly; only gradient all-reduces cross pods).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    import numpy as np
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices, have {len(devices)} — run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            f"(launch/dryrun.py sets this)")
+    return jax.make_mesh(shape, axes, devices=devices[:n])
+
+
+def make_host_mesh():
+    """Degenerate 1x1 mesh for CPU smoke tests."""
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         devices=jax.devices()[:1])
+
+
+# TPU v5e hardware constants for the roofline model (per chip)
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # bytes/s
+ICI_BW_PER_LINK = 50e9          # bytes/s per link (~50 GB/s)
+DCN_BW_PER_POD = 25e9           # bytes/s pod-to-pod (cross-pod DP traffic)

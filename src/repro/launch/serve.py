@@ -1,0 +1,71 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id> ...``
+
+Batched autoregressive decode with the cache machinery; request batches
+are WUKONG DAG tasks (retry + concurrency from the engine). See
+examples/serve_lm.py for the annotated version; this is the module entry
+point the cluster runs.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.core import EngineConfig, FaultConfig, GraphBuilder, WukongEngine
+from repro.models import model as M
+from repro.runtime.serve import build_serve_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm_360m")
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen-len", type=int, default=16)
+    ap.add_argument("--full-width", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full_width:
+        cfg = reduced(cfg)
+    params, _ = M.init_model(jax.random.PRNGKey(0), cfg)
+    serve_step = jax.jit(build_serve_step(cfg))
+    max_len = args.prompt_len + args.gen_len
+
+    def handle(rid: int):
+        key = jax.random.PRNGKey(1000 + rid)
+        prompt = jax.random.randint(
+            key, (args.batch, args.prompt_len), 0, cfg.vocab)
+        cache = M.init_cache(cfg, args.batch, max_len)
+        tok = prompt[:, 0]
+        t0 = time.time()
+        n_gen = 0
+        for pos in range(max_len - 1):
+            logits, cache = serve_step(
+                params, cache, {"token": tok, "pos": jnp.int32(pos)})
+            if pos + 1 < args.prompt_len:
+                tok = prompt[:, pos + 1]
+            else:
+                tok = jnp.argmax(logits, axis=-1)
+                n_gen += 1
+        return {"rid": rid, "tps": args.batch * n_gen / (time.time() - t0)}
+
+    g = GraphBuilder()
+    reqs = [g.add(lambda r=r: handle(r), name=f"req-{r}")
+            for r in range(args.requests)]
+    g.add(lambda *rs: float(np.mean([r["tps"] for r in rs])),
+          *reqs, name="mean_tps")
+    rep = WukongEngine(EngineConfig(
+        faults=FaultConfig(task_failure_prob=0.0, max_retries=2),
+        job_timeout_s=3600.0)).compute(g.build())
+    print(f"arch={cfg.name} requests={args.requests} "
+          f"mean decode throughput {rep.results['mean_tps']:.1f} tok/s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,109 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> ...``
+
+Wires the full stack together: data pipeline -> jitted train step ->
+WUKONG-orchestrated workflow with retries and async checkpoints. On the
+real cluster the same module runs per-host with ``--hosts/--host-id``
+giving each host its disjoint data shard; in this container it runs the
+reduced config on CPU.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced
+from repro.core import EngineConfig, FaultConfig
+from repro.data import DataConfig, TokenPipeline
+from repro.models import model as M
+from repro.optim import AdamWConfig, adamw_init
+from repro.runtime import checkpoint as ckpt
+from repro.runtime.orchestrator import (
+    build_training_workflow,
+    run_training_workflow,
+)
+from repro.runtime.train import build_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm_360m")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--warmup", type=int, default=10)
+    ap.add_argument("--full-width", action="store_true")
+    ap.add_argument("--hosts", type=int, default=1)
+    ap.add_argument("--host-id", type=int, default=0)
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_launch_ckpt")
+    ap.add_argument("--fail-prob", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full_width:
+        cfg = reduced(cfg)
+    cfg = dataclasses.replace(
+        cfg, n_layers=args.layers * cfg.pattern_period)
+
+    pipe = TokenPipeline(DataConfig(
+        vocab=cfg.vocab, seq_len=args.seq, batch_per_host=args.batch,
+        n_hosts=args.hosts, host_id=args.host_id, seed=13))
+    params, _ = M.init_model(jax.random.PRNGKey(0), cfg)
+    opt = adamw_init(params)
+    jstep = jax.jit(build_train_step(
+        cfg, AdamWConfig(lr=args.lr, warmup=args.warmup)))
+
+    os.makedirs(args.ckpt_dir, exist_ok=True)
+    path = os.path.join(args.ckpt_dir, f"{cfg.name}.npz")
+    losses: list[tuple[int, float]] = []
+
+    def init_fn():
+        if os.path.exists(path):
+            like = jax.eval_shape(lambda: {"params": params, "opt": opt})
+            st, step0 = ckpt.restore(path, like)
+            print(f"[resume] checkpoint @ step {step0}")
+            return (st["params"], st["opt"])
+        return (params, opt)
+
+    def data_fn(i: int):
+        b = pipe.batch(step=i)  # idempotent under retry
+        return {"tokens": jnp.asarray(b["tokens"]),
+                "labels": jnp.asarray(b["labels"])}
+
+    def step_fn(state, batch):
+        p, o = state
+        p, o, m = jstep(p, o, batch)
+        losses.append((int(o["count"]), float(m["loss"])))
+        return (p, o), {"loss": float(m["loss"])}
+
+    def checkpoint_fn(state, i):
+        p, o = state
+        ckpt.save(path, {"params": p, "opt": o}, step=i, async_=True)
+        return i
+
+    dag, final_key, mk = build_training_workflow(
+        n_steps=args.steps, step_fn=step_fn, init_fn=init_fn,
+        checkpoint_fn=checkpoint_fn, checkpoint_every=args.ckpt_every,
+        data_fn=data_fn)
+    t0 = time.time()
+    run_training_workflow(
+        dag, final_key, mk,
+        EngineConfig(faults=FaultConfig(task_failure_prob=args.fail_prob,
+                                        max_retries=2),
+                     job_timeout_s=24 * 3600.0))
+    dt = time.time() - t0
+    losses.sort()
+    print(f"{args.steps} steps in {dt:.1f}s "
+          f"({args.steps * args.batch * args.seq / dt:.0f} tok/s); "
+          f"loss {losses[0][1]:.4f} -> {losses[-1][1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,334 @@
+"""Recurrent mixers: Mamba (Jamba's SSM), mLSTM and sLSTM (xLSTM).
+
+Design notes (hardware adaptation, see DESIGN.md):
+- Mamba's selective scan is computed *chunked*: ``lax.scan`` over chunks
+  of the sequence with a ``jax.lax.associative_scan`` inside each chunk.
+  This bounds the materialized state history to (B, chunk, d_inner, N)
+  — the TPU-friendly equivalent of the CUDA kernel's SRAM blocking.
+- mLSTM uses the chunkwise-parallel form (intra-chunk decay-masked
+  attention + inter-chunk carried matrix state), which maps onto the MXU
+  as dense matmuls; this is also the form the Pallas linear-attention
+  kernel implements.
+- sLSTM has a true sequential dependency (block-diagonal recurrent gates)
+  and is computed with ``lax.scan`` over time — inherently latency-bound;
+  noted in DESIGN.md as the one layer that cannot be parallelized over
+  sequence.
+
+All functions carry explicit recurrent state so the same code serves
+training (state=zeros, full sequence) and decode (state threaded through
+steps).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import EMBED, HEADS, INNER, STATE, _init, dtype_of
+
+Params = dict[str, Any]
+
+MAMBA_CHUNK = 256
+MLSTM_CHUNK = 256
+
+
+# ---------------------------------------------------------------------------
+# Mamba (selective SSM) — Jamba's mixer
+# ---------------------------------------------------------------------------
+
+def init_mamba(key, cfg: ModelConfig) -> tuple[Params, Params]:
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state_dim
+    dt_rank = max(1, d // 16)
+    w = cfg.ssm_conv_width
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 6)
+    p = {
+        "in_proj": _init(ks[0], (d, 2 * di), d ** -0.5, dt),
+        "conv_w": _init(ks[1], (w, di), w ** -0.5, dt),
+        "conv_b": jnp.zeros((di,), dtype=dt),
+        "x_proj": _init(ks[2], (di, dt_rank + 2 * n), di ** -0.5, dt),
+        "dt_proj": _init(ks[3], (dt_rank, di), dt_rank ** -0.5, dt),
+        "dt_bias": jnp.full((di,), -4.6, dtype=jnp.float32),  # softplus≈0.01
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32),
+                                  (di, 1))),
+        "D": jnp.ones((di,), dtype=jnp.float32),
+        "out_proj": _init(ks[4], (di, d), di ** -0.5, dt),
+    }
+    s = {
+        "in_proj": (EMBED, INNER),
+        "conv_w": (None, INNER),
+        "conv_b": (INNER,),
+        "x_proj": (INNER, None),
+        "dt_proj": (None, INNER),
+        "dt_bias": (INNER,),
+        "A_log": (INNER, STATE),
+        "D": (INNER,),
+        "out_proj": (INNER, EMBED),
+    }
+    return p, s
+
+
+def _mamba_scan_chunked(deltaA, deltaBu, h0):
+    """h_t = deltaA_t * h_{t-1} + deltaBu_t, scanned over axis 1 (seq).
+
+    deltaA, deltaBu: (B, S, di, N); h0: (B, di, N). Returns (hs, h_last).
+    Chunked: lax.scan over S/chunk steps, associative_scan inside.
+    """
+    B, S, di, N = deltaA.shape
+    chunk = min(MAMBA_CHUNK, S)
+    assert S % chunk == 0, (S, chunk)
+    nchunks = S // chunk
+    dA = deltaA.reshape(B, nchunks, chunk, di, N).swapaxes(0, 1)
+    dBu = deltaBu.reshape(B, nchunks, chunk, di, N).swapaxes(0, 1)
+
+    def step(h, x):
+        a, b = x  # (B, chunk, di, N)
+
+        def combine(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, bl * ar + br
+
+        a_cum, b_cum = jax.lax.associative_scan(combine, (a, b), axis=1)
+        hs = a_cum * h[:, None] + b_cum      # (B, chunk, di, N)
+        return hs[:, -1], hs
+
+    h_last, hs = jax.lax.scan(step, h0, (dA, dBu))
+    hs = hs.swapaxes(0, 1).reshape(B, S, di, N)
+    return hs, h_last
+
+
+def mamba(
+    p: Params,
+    x: jax.Array,                       # (B, S, d)
+    cfg: ModelConfig,
+    state: tuple[jax.Array, jax.Array] | None = None,
+    # state = (conv_state (B, w-1, di), ssm_state (B, di, N))
+) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
+    B, S, d = x.shape
+    di, n = cfg.d_inner, cfg.ssm_state_dim
+    w = cfg.ssm_conv_width
+    dt_rank = max(1, d // 16)
+
+    xz = x @ p["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)   # (B, S, di) each
+
+    if state is None:
+        conv_state = jnp.zeros((B, w - 1, di), dtype=xin.dtype)
+        ssm_state = jnp.zeros((B, di, n), dtype=jnp.float32)
+    else:
+        conv_state, ssm_state = state
+
+    # causal depthwise conv, width w
+    xpad = jnp.concatenate([conv_state, xin], axis=1)   # (B, S+w-1, di)
+    conv = sum(
+        xpad[:, i:i + S, :] * p["conv_w"][i][None, None, :]
+        for i in range(w)
+    ) + p["conv_b"]
+    new_conv_state = xpad[:, -(w - 1):, :]
+    u = jax.nn.silu(conv)                                # (B, S, di)
+
+    proj = u @ p["x_proj"]                               # (B,S,dt_rank+2n)
+    dt_in, Bm, Cm = jnp.split(proj, [dt_rank, dt_rank + n], axis=-1)
+    delta = jax.nn.softplus(
+        (dt_in @ p["dt_proj"]).astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])                             # (di, N)
+    deltaA = jnp.exp(delta[..., None] * A[None, None])   # (B,S,di,N)
+    deltaBu = (delta * u.astype(jnp.float32))[..., None] * \
+        Bm.astype(jnp.float32)[:, :, None, :]            # (B,S,di,N)
+
+    hs, h_last = _mamba_scan_chunked(deltaA, deltaBu, ssm_state)
+    y = jnp.einsum("bsdn,bsn->bsd", hs,
+                   Cm.astype(jnp.float32))               # (B,S,di)
+    y = y + u.astype(jnp.float32) * p["D"]
+    y = (y.astype(x.dtype) * jax.nn.silu(z))
+    return y @ p["out_proj"], (new_conv_state, h_last)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM matrix-memory cell) — chunkwise parallel form
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg: ModelConfig) -> tuple[Params, Params]:
+    d = cfg.d_model
+    dk = int(cfg.mlstm_proj_factor * d)
+    H = cfg.n_heads
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": _init(ks[0], (d, dk), d ** -0.5, dt),
+        "wk": _init(ks[1], (d, dk), d ** -0.5, dt),
+        "wv": _init(ks[2], (d, dk), d ** -0.5, dt),
+        "wi": _init(ks[3], (d, H), d ** -0.5, jnp.float32),  # input gate
+        "wf": _init(ks[4], (d, H), d ** -0.5, jnp.float32),  # forget gate
+        "wo": _init(ks[5], (dk, d), dk ** -0.5, dt),
+    }
+    s = {
+        "wq": (EMBED, HEADS), "wk": (EMBED, HEADS), "wv": (EMBED, HEADS),
+        "wi": (EMBED, None), "wf": (EMBED, None), "wo": (HEADS, EMBED),
+    }
+    return p, s
+
+
+def mlstm(
+    p: Params,
+    x: jax.Array,                      # (B, S, d)
+    cfg: ModelConfig,
+    state: tuple[jax.Array, jax.Array] | None = None,
+    # state = (C (B,H,hd,hd) fp32, n (B,H,hd) fp32)
+) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
+    """Chunkwise mLSTM with sigmoid forget gates (GLA-style stabilized
+    simplification of xLSTM's exponential gating; DESIGN.md §2)."""
+    B, S, d = x.shape
+    H = cfg.n_heads
+    dk = int(cfg.mlstm_proj_factor * d)
+    hd = dk // H
+    chunk = min(MLSTM_CHUNK, S)
+    assert S % chunk == 0
+    nchunks = S // chunk
+
+    def heads(t):
+        return t.reshape(B, S, H, hd)
+
+    q = heads(x @ p["wq"]).astype(jnp.float32) * (hd ** -0.5)
+    k = heads(x @ p["wk"]).astype(jnp.float32)
+    v = heads(x @ p["wv"]).astype(jnp.float32)
+    logf = jax.nn.log_sigmoid((x.astype(jnp.float32) @ p["wf"]))  # (B,S,H)
+    i_gate = jnp.exp(jax.nn.log_sigmoid(x.astype(jnp.float32) @ p["wi"]))
+
+    if state is None:
+        C0 = jnp.zeros((B, H, hd, hd), dtype=jnp.float32)
+        n0 = jnp.zeros((B, H, hd), dtype=jnp.float32)
+    else:
+        C0, n0 = state
+
+    def rc(t, extra):  # reshape to chunks, put chunk axis first
+        return t.reshape((B, nchunks, chunk) + extra).swapaxes(0, 1)
+
+    qs, ks_, vs = rc(q, (H, hd)), rc(k, (H, hd)), rc(v, (H, hd))
+    fs, is_ = rc(logf, (H,)), rc(i_gate, (H,))
+
+    def step(carry, inp):
+        C, n = carry
+        qc, kc, vc, fc, ic = inp   # (B, chunk, H, ...)
+        fcum = jnp.cumsum(fc, axis=1)               # (B,chunk,H)
+        ftot = fcum[:, -1]                          # (B,H)
+        # inter-chunk: contribution of carried state
+        decay_q = jnp.exp(fcum)                     # (B,chunk,H)
+        y_inter = jnp.einsum("bshk,bhkv->bshv", qc * decay_q[..., None], C)
+        n_inter = jnp.einsum("bshk,bhk->bsh", qc * decay_q[..., None], n)
+        # intra-chunk: decay-masked attention
+        # D[s,t] = exp(fcum_s - fcum_t) * i_t   for t <= s
+        rel = fcum[:, :, None, :] - fcum[:, None, :, :]   # (B,s,t,H)
+        mask = jnp.tril(jnp.ones((chunk, chunk), dtype=bool))
+        D = jnp.where(mask[None, :, :, None], jnp.exp(rel), 0.0)
+        D = D * ic[:, None, :, :]                   # apply i_t
+        scores = jnp.einsum("bshk,bthk->bsth", qc, kc) * D
+        y_intra = jnp.einsum("bsth,bthv->bshv", scores, vc)
+        n_intra = jnp.einsum("bsth->bsh", scores)
+        y = y_inter + y_intra
+        nrm = n_inter + n_intra
+        y = y / jnp.maximum(jnp.abs(nrm)[..., None], 1.0)
+        # state update
+        decay_k = jnp.exp(ftot[:, None, :] - fcum)  # (B,chunk,H)
+        kv = jnp.einsum("bshk,bshv->bhkv",
+                        kc * (ic * decay_k)[..., None], vc)
+        ksum = jnp.einsum("bshk->bhk", kc * (ic * decay_k)[..., None])
+        C_new = jnp.exp(ftot)[..., None, None] * C + kv
+        n_new = jnp.exp(ftot)[..., None] * n + ksum
+        return (C_new, n_new), y
+
+    (C_f, n_f), ys = jax.lax.scan(step, (C0, n0), (qs, ks_, vs, fs, is_))
+    y = ys.swapaxes(0, 1).reshape(B, S, H, hd).reshape(B, S, dk)
+    return y.astype(x.dtype) @ p["wo"], (C_f, n_f)
+
+
+def mlstm_decode_step(
+    p: Params, x: jax.Array, cfg: ModelConfig,
+    state: tuple[jax.Array, jax.Array],
+) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
+    """Single-token mLSTM recurrence (decode)."""
+    B, S, d = x.shape
+    assert S == 1
+    H = cfg.n_heads
+    dk = int(cfg.mlstm_proj_factor * d)
+    hd = dk // H
+    C, n = state
+    q = (x @ p["wq"]).reshape(B, H, hd).astype(jnp.float32) * (hd ** -0.5)
+    k = (x @ p["wk"]).reshape(B, H, hd).astype(jnp.float32)
+    v = (x @ p["wv"]).reshape(B, H, hd).astype(jnp.float32)
+    xf = x[:, 0].astype(jnp.float32)
+    f = jnp.exp(jax.nn.log_sigmoid(xf @ p["wf"]))       # (B,H)
+    i = jnp.exp(jax.nn.log_sigmoid(xf @ p["wi"]))
+    C = f[..., None, None] * C + i[..., None, None] * \
+        jnp.einsum("bhk,bhv->bhkv", k, v)
+    n = f[..., None] * n + i[..., None] * k
+    y = jnp.einsum("bhk,bhkv->bhv", q, C)
+    nrm = jnp.einsum("bhk,bhk->bh", q, n)
+    y = y / jnp.maximum(jnp.abs(nrm)[..., None], 1.0)
+    y = y.reshape(B, 1, dk).astype(x.dtype)
+    return y @ p["wo"], (C, n)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (xLSTM scalar-memory cell) — sequential scan
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg: ModelConfig) -> tuple[Params, Params]:
+    d, H = cfg.d_model, cfg.n_heads
+    hd = d // H
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 3)
+    p = {
+        # gates i,f,z,o stacked: input weights (d, 4d)
+        "w_gates": _init(ks[0], (d, 4 * d), d ** -0.5, dt),
+        # block-diagonal recurrent weights per head: (H, hd, 4*hd)
+        "r_gates": _init(ks[1], (H, hd, 4 * hd), hd ** -0.5, jnp.float32),
+        "b_gates": jnp.zeros((4 * d,), dtype=jnp.float32),
+        "w_out": _init(ks[2], (d, d), d ** -0.5, dt),
+    }
+    s = {
+        "w_gates": (EMBED, None),
+        "r_gates": (HEADS, None, None),
+        "b_gates": (None,),
+        "w_out": (EMBED, EMBED),
+    }
+    return p, s
+
+
+def slstm(
+    p: Params,
+    x: jax.Array,                      # (B, S, d)
+    cfg: ModelConfig,
+    state: tuple[jax.Array, jax.Array] | None = None,
+    # state = (c (B,d), h (B,d)) fp32
+) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
+    B, S, d = x.shape
+    H = cfg.n_heads
+    hd = d // H
+    pre = (x @ p["w_gates"]).astype(jnp.float32) + p["b_gates"]  # (B,S,4d)
+    if state is None:
+        c0 = jnp.zeros((B, d), dtype=jnp.float32)
+        h0 = jnp.zeros((B, d), dtype=jnp.float32)
+    else:
+        c0, h0 = state
+
+    def step(carry, pre_t):
+        c, h = carry                              # (B, d)
+        hh = h.reshape(B, H, hd)
+        rec = jnp.einsum("bhk,hkg->bhg", hh, p["r_gates"])  # (B,H,4hd)
+        z_all = pre_t + rec.reshape(B, 4 * d)
+        i, f, z, o = jnp.split(z_all, 4, axis=-1)
+        i = jnp.exp(jax.nn.log_sigmoid(i))
+        f = jax.nn.sigmoid(f)
+        z = jnp.tanh(z)
+        o = jax.nn.sigmoid(o)
+        c_new = f * c + i * z
+        h_new = o * jnp.tanh(c_new)
+        return (c_new, h_new), h_new
+
+    (c_f, h_f), hs = jax.lax.scan(step, (c0, h0), pre.swapaxes(0, 1))
+    y = hs.swapaxes(0, 1).astype(x.dtype)          # (B,S,d)
+    return y @ p["w_out"], (c_f, h_f)

@@ -1,0 +1,14 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, *, warmup: int = 200, total: int = 10000,
+                    min_frac: float = 0.1):
+    step = jnp.asarray(step, dtype=jnp.float32)
+    # step 0 is the FIRST step: lr must be nonzero ((step+1)/warmup)
+    warm = (step + 1.0) / jnp.maximum(1.0, warmup)
+    prog = jnp.clip((step - warmup) / jnp.maximum(1.0, total - warmup), 0, 1)
+    cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < warmup, warm, cos)

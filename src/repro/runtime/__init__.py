@@ -1,0 +1,2 @@
+"""Distributed training/serving runtime (sharding, steps, checkpoint,
+orchestration)."""

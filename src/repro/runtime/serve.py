@@ -1,0 +1,38 @@
+"""Serving step builders (decode with KV/SSM cache) and input specs."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+
+
+def build_serve_step(cfg: ModelConfig):
+    """(params, cache, batch) -> (logits, new_cache).
+
+    ``batch`` = {"token": (B,) int32, "pos": () int32}. One new token per
+    sequence against a cache of ``seq_len`` (the assignment's decode
+    shapes).
+    """
+
+    def serve_step(params, cache, batch):
+        return M.decode_step(params, cfg, cache, batch["token"],
+                             batch["pos"])
+
+    return serve_step
+
+
+def decode_inputs(cfg: ModelConfig, batch: int, seq_len: int,
+                  abstract: bool = False) -> dict[str, Any]:
+    if abstract:
+        return {
+            "token": jax.ShapeDtypeStruct((batch,), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+    return {
+        "token": jnp.zeros((batch,), dtype=jnp.int32),
+        "pos": jnp.asarray(seq_len - 1, dtype=jnp.int32),
+    }

@@ -1,0 +1,132 @@
+"""Logical-axis → mesh-axis resolution (DP / FSDP / TP / EP / SP + pod).
+
+Model code annotates parameters with *logical* axis names
+(repro.models.layers). This module resolves them to ``PartitionSpec``s for
+a concrete mesh, with a shape-aware divisibility guard: a mesh axis is
+only applied to a tensor dim it divides evenly — otherwise that dim falls
+back to replicated. This keeps one rule-set valid across all 10 archs
+(e.g. xLSTM's 4 heads cannot shard over a 16-way model axis; its
+projection matrices still shard on the flat head*dim axis).
+
+Parallelism layout (the §Perf baseline):
+- batch        → ("pod", "data") — pure DP across pods, lowest DCN traffic
+- heads/ff/vocab/inner → "model" — Megatron-style tensor parallelism
+- embed (weights' d_model dim) → "data" when ``fsdp=True`` — ZeRO-3-style
+  weight+optimizer sharding, all-gathered per layer under the scan
+  (overlaps with compute via XLA latency hiding)
+- experts      → "model" when E divides the axis (EP), else TP-over-ff
+- kv_seq       → "model" for decode KV caches — sequence parallelism for
+  long-context serving (attention softmax reductions become collectives)
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def rules_for(mesh: Mesh, *, fsdp: bool, shard_kv_seq: bool = False,
+              expert_parallel: bool = True,
+              tensor_parallel: bool = True) -> dict[str, Any]:
+    """``tensor_parallel=False`` replicates weights over the model axis
+    and lets the model axis carry extra batch instead — right for small
+    models whose per-op shards would be sliver-sized (xLSTM, SmolLM,
+    Whisper), where TP collectives dominate the roofline."""
+    tp = "model" if tensor_parallel else None
+    batch = batch_axes(mesh)
+    if not tensor_parallel:
+        batch = batch + ("model",)
+    return {
+        "vocab": tp,
+        "embed": "data" if fsdp else None,
+        "heads": tp,
+        "kv_heads": tp,
+        "head_dim": None,
+        "ff": tp,
+        "experts": tp if expert_parallel else None,
+        "layers": None,
+        "inner": tp,
+        "state": None,
+        "batch": batch,
+        "kv_seq": "model" if (shard_kv_seq and tensor_parallel) else None,
+        None: None,
+    }
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        out = 1
+        for a in axis:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[axis]
+
+
+def resolve_spec(
+    spec: tuple, shape: tuple[int, ...], mesh: Mesh, rules: dict[str, Any],
+) -> P:
+    """Logical spec tuple + concrete shape -> PartitionSpec.
+
+    Drops any mesh axis that does not divide the corresponding dim, and
+    never uses one mesh axis twice in a single spec.
+    """
+    assert len(spec) == len(shape), (spec, shape)
+    used: set[str] = set()
+    out = []
+    for logical, dim in zip(spec, shape):
+        axis = rules.get(logical)
+        flat = axis if isinstance(axis, tuple) else (
+            (axis,) if axis else ())
+        if axis is None or any(a in used for a in flat):
+            out.append(None)
+            continue
+        if dim % _axis_size(mesh, axis) != 0:
+            out.append(None)
+            continue
+        used.update(flat)
+        out.append(axis)
+    return P(*out)
+
+
+def _is_spec_leaf(x: Any) -> bool:
+    return isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+
+
+def tree_shardings(
+    abstract: Any, specs: Any, mesh: Mesh, rules: dict[str, Any],
+) -> Any:
+    """NamedShardings for a pytree given its abstract shapes and logical
+    specs (parallel trees)."""
+    flat_a, treedef = jax.tree.flatten(abstract)
+    flat_s = jax.tree.flatten(specs, is_leaf=_is_spec_leaf)[0]
+    assert len(flat_a) == len(flat_s), (len(flat_a), len(flat_s))
+    out = [
+        NamedSharding(mesh, resolve_spec(s, a.shape, mesh, rules))
+        for a, s in zip(flat_a, flat_s)
+    ]
+    return jax.tree.unflatten(treedef, out)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def batch_sharding(mesh: Mesh, ndim: int = 2,
+                   dim0: int | None = None) -> NamedSharding:
+    """Shard dim 0 (global batch) over the data axes; replicate the rest.
+
+    When ``dim0`` is given and is not divisible by the data-axes extent
+    (e.g. long_500k's global_batch=1), dim 0 falls back to replicated —
+    the model axis still provides parallelism for such cells."""
+    axes = batch_axes(mesh)
+    if dim0 is not None and dim0 % _axis_size(mesh, axes) != 0:
+        return NamedSharding(mesh, P(*([None] * ndim)))
+    return NamedSharding(mesh, P(axes, *([None] * (ndim - 1))))

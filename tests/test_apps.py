@@ -1,0 +1,86 @@
+"""Paper workloads: numerical correctness on the WUKONG engine."""
+import numpy as np
+import pytest
+
+from repro.apps.gemm import gemm_dag, gemm_expected
+from repro.apps.svc import svc_dag, svc_expected
+from repro.apps.svd import (
+    randomized_svd_dag,
+    randomized_svd_expected,
+    tsqr_singular_values_expected,
+    tsqr_svd_dag,
+)
+from repro.apps.tree_reduction import (
+    tree_reduction_dag,
+    tree_reduction_expected,
+)
+from repro.core import ServerfulEngine, WukongEngine
+
+
+@pytest.fixture(scope="module")
+def engine():
+    return WukongEngine()
+
+
+def test_tree_reduction(engine):
+    rep = engine.compute(tree_reduction_dag(128))
+    (_, v), = rep.results.items()
+    assert v[0] == tree_reduction_expected(128)
+
+
+def test_tree_reduction_payload_ballast(engine):
+    rep = engine.compute(tree_reduction_dag(32, payload_bytes=4096))
+    (_, v), = rep.results.items()
+    assert v[0] == tree_reduction_expected(32)
+    assert v.shape == (1 + 4096 // 8,)
+
+
+def test_gemm(engine):
+    rep = engine.compute(gemm_dag(256, 64))
+    C = np.block([[np.asarray(rep.results[f"gemm-C-{i}-{j}"])
+                   for j in range(4)] for i in range(4)])
+    np.testing.assert_allclose(C, gemm_expected(256, 64),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_gemm_engines_agree(engine):
+    dag = gemm_dag(128, 64)
+    a = engine.compute(dag).results
+    b = ServerfulEngine().compute(gemm_dag(128, 64)).results
+    for k in a:
+        np.testing.assert_allclose(np.asarray(a[k]), np.asarray(b[k]),
+                                   rtol=1e-5)
+
+
+def test_tsqr_svd(engine):
+    rep = engine.compute(tsqr_svd_dag(1024, 32, 8))
+    np.testing.assert_allclose(
+        np.asarray(rep.results["svd1-S"]),
+        tsqr_singular_values_expected(1024, 32, 8), rtol=1e-3)
+    # U blocks present (the wide fan-out stage)
+    assert sum(k.startswith("svd1-U-") for k in rep.results) == 8
+
+
+def test_randomized_svd(engine):
+    rep = engine.compute(randomized_svd_dag(512, 5, 5, 8))
+    want = randomized_svd_expected(512, 5, 5, 8)
+    np.testing.assert_allclose(np.asarray(rep.results["svd2-S"]), want,
+                               rtol=1e-2)
+
+
+def test_randomized_svd_ideal_storage_same_result_less_traffic(engine):
+    want = randomized_svd_expected(512, 5, 5, 8)
+    rep_n = engine.compute(randomized_svd_dag(512, 5, 5, 8))
+    rep_i = engine.compute(
+        randomized_svd_dag(512, 5, 5, 8, ideal_storage=True))
+    np.testing.assert_allclose(np.asarray(rep_i.results["svd2-S"]), want,
+                               rtol=1e-2)
+    assert rep_i.kv_stats["bytes_written"] < \
+        rep_n.kv_stats["bytes_written"] / 2
+
+
+def test_svc(engine):
+    rep = engine.compute(svc_dag(4096, 8, 3))
+    np.testing.assert_allclose(np.asarray(rep.results["svc-w3"]),
+                               svc_expected(4096, 8, 3),
+                               rtol=1e-4, atol=1e-5)

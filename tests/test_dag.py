@@ -1,0 +1,91 @@
+"""DAG structure + static schedule generation (paper §IV-B)."""
+import operator
+
+import pytest
+
+from repro.core import DAG, GraphBuilder, delayed_graph
+from repro.core.dag import CycleError, Task, TaskRef
+from repro.core.schedule import generate_static_schedules
+
+
+def fig6_dag() -> DAG:
+    """The paper's Figure 6 example: two leaves, shared T4/T6."""
+    g = GraphBuilder()
+    t1 = g.add(lambda: 1, name="T1")
+    t2 = g.add(lambda: 2, name="T2")
+    t3 = g.add(lambda x: x + 10, t2, name="T3")
+    t5 = g.add(lambda x: x * 2, t3, name="T5")
+    g.add(operator.add, t1, t3, name="T4")
+    g.add(operator.add, TaskRef("T4"), t5, name="T6")
+    return g.build()
+
+
+class TestDAG:
+    def test_leaves_roots(self):
+        dag = fig6_dag()
+        assert set(dag.leaves) == {"T1", "T2"}
+        assert set(dag.roots) == {"T6"}
+
+    def test_topological_order(self):
+        dag = fig6_dag()
+        order = dag.topological_order()
+        pos = {k: i for i, k in enumerate(order)}
+        for k, deps in dag.deps.items():
+            for d in deps:
+                assert pos[d] < pos[k]
+
+    def test_cycle_detection(self):
+        with pytest.raises(CycleError):
+            DAG([
+                Task("a", lambda x: x, (TaskRef("b"),)),
+                Task("b", lambda x: x, (TaskRef("a"),)),
+            ])
+
+    def test_missing_dep(self):
+        with pytest.raises(ValueError, match="missing"):
+            DAG([Task("a", lambda x: x, (TaskRef("zzz"),))])
+
+    def test_duplicate_key(self):
+        with pytest.raises(ValueError, match="duplicate"):
+            DAG([Task("a", lambda: 1), Task("a", lambda: 2)])
+
+    def test_from_dsk(self):
+        dag = delayed_graph({
+            "x": 1,
+            "y": (operator.add, "x", 10),
+        })
+        assert dag.deps["y"] == ("x",)
+        assert dag.leaves == ("x",)
+
+    def test_reachability(self):
+        dag = fig6_dag()
+        assert dag.reachable_from("T1") == {"T1", "T4", "T6"}
+        assert dag.reachable_from("T2") == {"T2", "T3", "T4", "T5", "T6"}
+
+
+class TestStaticSchedules:
+    def test_one_schedule_per_leaf(self):
+        dag = fig6_dag()
+        ss = generate_static_schedules(dag)
+        assert set(ss.schedules) == {"T1", "T2"}
+
+    def test_schedule_contents_match_paper(self):
+        """Figure 6(b): schedule 1 = {T1,T4,T6}; schedule 2 covers the
+        rest and the shared nodes T4, T6 appear in BOTH."""
+        dag = fig6_dag()
+        ss = generate_static_schedules(dag)
+        assert ss.schedules["T1"].nodes == {"T1", "T4", "T6"}
+        assert ss.schedules["T2"].nodes == {"T2", "T3", "T4", "T5", "T6"}
+        shared = ss.schedules["T1"].nodes & ss.schedules["T2"].nodes
+        assert shared == {"T4", "T6"}
+
+    def test_fan_in_counters(self):
+        dag = fig6_dag()
+        counters = generate_static_schedules(dag).fan_in_counters()
+        assert counters == {"__fanin__/T4": 2, "__fanin__/T6": 2}
+
+    def test_code_size_positive(self):
+        dag = fig6_dag()
+        ss = generate_static_schedules(dag)
+        for s in ss.schedules.values():
+            assert s.code_size_bytes > 0

@@ -1,0 +1,150 @@
+"""Runtime substrate: sharding rules, checkpointing, orchestrator."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core import EngineConfig, FaultConfig
+from repro.models import model as M
+from repro.optim import AdamWConfig, adamw_init
+from repro.runtime import checkpoint as ckpt
+from repro.runtime import sharding as sh
+from repro.runtime.orchestrator import (
+    build_training_workflow,
+    run_training_workflow,
+)
+from repro.configs import get_config, reduced
+from repro.runtime.train import build_train_step, synthetic_batch
+
+
+def tiny_mesh():
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         devices=jax.devices()[:1])
+
+
+class TestShardingRules:
+    def test_divisibility_guard(self):
+        mesh = tiny_mesh()
+        rules = {"heads": "model", "embed": None, None: None}
+        # dim 4 over a 1-way axis is fine
+        spec = sh.resolve_spec(("heads", "embed"), (4, 8), mesh, rules)
+        assert spec == P("model", None)
+
+    def test_no_axis_reuse(self):
+        mesh = tiny_mesh()
+        rules = {"heads": "model", "ff": "model", None: None}
+        spec = sh.resolve_spec(("heads", "ff"), (4, 4), mesh, rules)
+        assert spec == P("model", None)  # second use dropped
+
+    def test_batch_axes_single_vs_multi(self):
+        mesh = tiny_mesh()
+        assert sh.batch_axes(mesh) == ("data",)
+
+    def test_tree_shardings_cover_model(self):
+        cfg = reduced(get_config("mixtral_8x7b"))
+        mesh = tiny_mesh()
+        rules = sh.rules_for(mesh, fsdp=True)
+        aparams = M.abstract_params(cfg)
+        specs = M.model_specs(cfg)
+        shardings = sh.tree_shardings(aparams, specs, mesh, rules)
+        assert jax.tree.structure(shardings) == jax.tree.structure(
+            jax.tree.map(lambda x: 0, aparams))
+
+
+class TestCheckpoint:
+    def test_save_restore_roundtrip(self, tmp_path):
+        cfg = reduced(get_config("smollm_360m"))
+        params, _ = M.init_model(jax.random.PRNGKey(0), cfg)
+        opt = adamw_init(params)
+        state = {"params": params, "opt": opt}
+        path = os.path.join(tmp_path, "ckpt.npz")
+        ckpt.save(path, state, step=7)
+        assert ckpt.latest_step(path) == 7
+        like = jax.eval_shape(lambda: state)
+        restored, step = ckpt.restore(path, like)
+        assert step == 7
+        for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_async_save(self, tmp_path):
+        cfg = reduced(get_config("smollm_360m"))
+        params, _ = M.init_model(jax.random.PRNGKey(0), cfg)
+        path = os.path.join(tmp_path, "async.npz")
+        t = ckpt.save(path, {"p": params}, step=3, async_=True)
+        t.join(timeout=60)
+        assert ckpt.latest_step(path) == 3
+
+    def test_restore_resharded(self, tmp_path):
+        """Elastic resume: restore onto explicit (trivial) shardings."""
+        mesh = tiny_mesh()
+        x = {"w": jnp.arange(16.0).reshape(4, 4)}
+        path = os.path.join(tmp_path, "r.npz")
+        ckpt.save(path, x, step=1)
+        shardings = {"w": sh.replicated(mesh)}
+        restored, _ = ckpt.restore(path, jax.eval_shape(lambda: x),
+                                   shardings)
+        np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                      np.asarray(x["w"]))
+
+
+class TestOrchestrator:
+    def test_training_workflow_chain(self):
+        """The cluster workflow (data -> step -> metrics + checkpoints)
+        runs on the WUKONG engine and reaches the final state."""
+        ckpts = []
+
+        def init_fn():
+            return 0.0
+
+        def step_fn(state, batch):
+            return state + batch, {"loss": 100.0 - state}
+
+        def data_fn(i):
+            return float(i + 1)
+
+        dag, final_key, metric_keys = build_training_workflow(
+            n_steps=6, step_fn=step_fn, init_fn=init_fn,
+            checkpoint_fn=lambda st, i: ckpts.append((i, st)),
+            checkpoint_every=2, data_fn=data_fn)
+        res = run_training_workflow(dag, final_key, metric_keys)
+        assert res.report.results[final_key] == sum(range(1, 7))
+        assert [i for i, _ in sorted(ckpts)] == [1, 3, 5]
+
+    def test_training_workflow_with_failures(self):
+        """Step tasks survive injected Lambda failures via retries."""
+        def step_fn(state, i):
+            return state + 1, {}
+
+        dag, final_key, mk = build_training_workflow(
+            n_steps=5, step_fn=step_fn, init_fn=lambda: 0)
+        cfg = EngineConfig(faults=FaultConfig(
+            task_failure_prob=0.05, max_retries=2, seed=2))
+        res = run_training_workflow(dag, final_key, mk, cfg)
+        assert res.report.results[final_key] == 5
+
+    def test_real_train_steps_through_orchestrator(self):
+        """End-to-end: jitted LM train steps as DAG task payloads."""
+        cfg = reduced(get_config("smollm_360m"))
+        import dataclasses
+        cfg = dataclasses.replace(cfg, n_layers=2)
+        params, _ = M.init_model(jax.random.PRNGKey(0), cfg)
+        opt = adamw_init(params)
+        jstep = jax.jit(build_train_step(cfg, AdamWConfig(lr=1e-3)))
+
+        def init_fn():
+            return (params, opt)
+
+        def step_fn(state, i):
+            p, o = state
+            batch = synthetic_batch(cfg, 2, 32, seed=i)
+            p, o, m = jstep(p, o, batch)
+            return (p, o), {"loss": float(m["loss"])}
+
+        dag, final_key, mk = build_training_workflow(
+            n_steps=3, step_fn=step_fn, init_fn=init_fn)
+        res = run_training_workflow(dag, final_key, mk)
+        final_params, final_opt = res.report.results[final_key]
+        assert int(final_opt["count"]) == 3
