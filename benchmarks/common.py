@@ -10,15 +10,14 @@ container — DESIGN.md §1).
 """
 from __future__ import annotations
 
-import dataclasses
 import os
-import time
-from typing import Any, Callable
+from typing import Any
 
 from repro.core import (
-    CentralizedConfig,
+    ALL_PASSES,
     CostModel,
     EngineConfig,
+    OptimizeConfig,
     ParallelInvokerEngine,
     PubSubEngine,
     ServerfulConfig,
@@ -57,6 +56,23 @@ def sleep_per_flop() -> float:
 
 def wukong(scale: float = SIM_SCALE, **kw: Any) -> WukongEngine:
     return WukongEngine(EngineConfig(cost=cost(scale), **kw))
+
+
+def wukong_optimized(scale: float = SIM_SCALE,
+                     optimize: OptimizeConfig = ALL_PASSES,
+                     **kw: Any) -> WukongEngine:
+    """WUKONG with the DAG compiler pipeline (optimized-vs-unoptimized
+    series; pass an ``OptimizeConfig`` for single-pass ablations)."""
+    return WukongEngine(EngineConfig(cost=cost(scale), optimize=optimize,
+                                     **kw))
+
+
+def parallel_invoker_optimized(scale: float = SIM_SCALE,
+                               n: int = 20) -> ParallelInvokerEngine:
+    """Centralized best-iteration with the DAG compiler (chain fusion
+    shrinks its one-Lambda-per-task graph)."""
+    return ParallelInvokerEngine(cost=cost(scale), num_invokers=n,
+                                 optimize=ALL_PASSES)
 
 
 def strawman(scale: float = SIM_SCALE) -> StrawmanEngine:

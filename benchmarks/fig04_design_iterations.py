@@ -3,6 +3,11 @@
 Paper claims: (a) parallel-invoker executes TR ~24% faster than strawman/
 pub-sub at 0ms delay (invocation-bound, 512 leaf tasks); (b) pub/sub pulls
 ahead of strawman as task duration grows (fewer TCP round-trips).
+
+Beyond-paper series: ``parallel_invoker+opt`` runs the best centralized
+iteration behind the DAG compiler (repro.core.optimize) — an
+optimized-vs-unoptimized pairing; TR has no fusible chains, so this also
+bounds the compiler's overhead on a pass-neutral graph.
 """
 from __future__ import annotations
 
@@ -16,6 +21,7 @@ def run(n: int = 512, delays_ms=(0.0, 50.0, 100.0)) -> list[dict]:
         ("strawman", common.strawman()),
         ("pubsub", common.pubsub()),
         ("parallel_invoker", common.parallel_invoker()),
+        ("parallel_invoker+opt", common.parallel_invoker_optimized()),
     ]
     for delay in delays_ms:
         for label, eng in engines:

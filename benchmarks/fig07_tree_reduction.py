@@ -3,6 +3,11 @@
 Paper claims: WUKONG beats every centralized iteration; at 0ms delay the
 communication-bound TR still favors Dask (EC2); with 250-500ms task
 delays WUKONG overtakes Dask (EC2) (~2.5x at 500ms).
+
+Beyond-paper series: ``wukong+opt`` is the same engine behind the DAG
+compiler (clustering's delayed fan-in I/O halves KV ``set`` traffic on TR
+and coalescing halves initial invocations), the optimized-vs-unoptimized
+comparison the Wukong follow-up paper motivates.
 """
 from __future__ import annotations
 
@@ -14,6 +19,7 @@ def run(n: int = 512, delays_ms=(0.0, 250.0, 500.0)) -> list[dict]:
     rows = []
     engines = [
         ("wukong", common.wukong()),
+        ("wukong+opt", common.wukong_optimized()),
         ("strawman", common.strawman()),
         ("pubsub", common.pubsub()),
         ("parallel_invoker", common.parallel_invoker()),

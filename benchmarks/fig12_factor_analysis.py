@@ -8,7 +8,6 @@ each KV shard its own VM (NIC decontention).
 from __future__ import annotations
 
 from repro.core import (
-    CentralizedConfig,
     EngineConfig,
     ParallelInvokerEngine,
     PubSubEngine,

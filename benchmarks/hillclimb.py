@@ -20,8 +20,6 @@ Run:  PYTHONPATH=src python -m benchmarks.hillclimb [cell...]
 """
 from __future__ import annotations
 
-import json
-import os
 import sys
 
 PEAK, HBM, ICI = 197e12, 819e9, 50e9
@@ -46,7 +44,7 @@ def show(tag: str, t: dict, model_flops: float) -> None:
 
 
 def run(arch: str, shape: str, variant_str: str):
-    from repro.launch.dryrun import Variant, parse_variant, run_cell
+    from repro.launch.dryrun import parse_variant, run_cell
     v = parse_variant(variant_str)
     rec = run_cell(arch, shape, multi_pod=False, variant=v, verbose=False,
                    probe=True)

@@ -1,11 +1,15 @@
 """Benchmark entry point: one module per paper figure.
 
 Prints ``name,us_per_call,derived`` CSV rows. Scale-down knobs:
-``REPRO_SIM_SCALE`` (simulated-latency multiplier) and ``--quick``.
+``REPRO_SIM_SCALE`` (simulated-latency multiplier), ``--quick`` (smaller
+problem sizes), and ``--smoke`` (toy sizes + near-zero simulated latency;
+a CI regression gate that executes every figure's engines end-to-end in
+seconds, checking they complete rather than how fast they run).
 """
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 
@@ -14,8 +18,16 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="smaller problem sizes (CI)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="toy sizes, near-zero simulated latency; "
+                         "engine-regression gate for CI")
     ap.add_argument("--only", default=None, help="comma list, e.g. fig07")
     args = ap.parse_args()
+
+    if args.smoke:
+        # Must be set before benchmarks.common is imported (it reads the
+        # env at import time).
+        os.environ.setdefault("REPRO_SIM_SCALE", "0.001")
 
     from benchmarks import (
         fig04_design_iterations,
@@ -29,33 +41,47 @@ def main() -> None:
     )
     from benchmarks import common
 
+    # One row per figure: (run fn, smoke kwargs, quick kwargs, full kwargs).
+    # Adding a figure here covers all three modes, including CI's
+    # bench-smoke gate.
     figs = {
-        "fig04": lambda: fig04_design_iterations.run(
-            n=128 if args.quick else 512,
-            delays_ms=(0.0, 50.0) if args.quick else (0.0, 50.0, 100.0)),
-        "fig07": lambda: fig07_tree_reduction.run(
-            n=128 if args.quick else 512,
-            delays_ms=(0.0, 250.0) if args.quick else (0.0, 250.0, 500.0)),
-        "fig08": lambda: fig08_gemm.run(
-            sizes=((512, 128),) if args.quick
-            else ((512, 128), (1024, 128), (2048, 128))),
-        "fig09": lambda: fig09_svd_tall.run(
-            row_sizes=(4096,) if args.quick else (4096, 8192, 16384)),
-        "fig10": lambda: fig10_svd_square.run(
-            sizes=(512,) if args.quick else (512, 1024, 2048, 4096)),
-        "fig11": lambda: fig11_svc.run(
-            sample_sizes=(8192,) if args.quick else (8192, 32768, 131072)),
-        "fig12": lambda: fig12_factor_analysis.run(
-            n=128 if args.quick else 512),
-        "fig13": lambda: fig13_task_cdf.run(n=1024 if args.quick else 2048),
+        "fig04": (fig04_design_iterations.run,
+                  dict(n=32, delays_ms=(0.0,)),
+                  dict(n=128, delays_ms=(0.0, 50.0)),
+                  dict(n=512, delays_ms=(0.0, 50.0, 100.0))),
+        "fig07": (fig07_tree_reduction.run,
+                  dict(n=32, delays_ms=(0.0,)),
+                  dict(n=128, delays_ms=(0.0, 250.0)),
+                  dict(n=512, delays_ms=(0.0, 250.0, 500.0))),
+        "fig08": (fig08_gemm.run,
+                  dict(sizes=((256, 128),)),
+                  dict(sizes=((512, 128),)),
+                  dict(sizes=((512, 128), (1024, 128), (2048, 128)))),
+        "fig09": (fig09_svd_tall.run,
+                  dict(row_sizes=(1024,)),
+                  dict(row_sizes=(4096,)),
+                  dict(row_sizes=(4096, 8192, 16384))),
+        "fig10": (fig10_svd_square.run,
+                  dict(sizes=(256,)),
+                  dict(sizes=(512,)),
+                  dict(sizes=(512, 1024, 2048, 4096))),
+        "fig11": (fig11_svc.run,
+                  dict(sample_sizes=(2048,)),
+                  dict(sample_sizes=(8192,)),
+                  dict(sample_sizes=(8192, 32768, 131072))),
+        "fig12": (fig12_factor_analysis.run,
+                  dict(n=32), dict(n=128), dict(n=512)),
+        "fig13": (fig13_task_cdf.run,
+                  dict(n=256), dict(n=1024), dict(n=2048)),
     }
+    mode = 0 if args.smoke else (1 if args.quick else 2)
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")
-    for name, fn in figs.items():
+    for name, (fn, *kwargs_by_mode) in figs.items():
         if only and name not in only:
             continue
         t0 = time.time()
-        rows = fn()
+        rows = fn(**kwargs_by_mode[mode])
         common.emit(rows, name)
         print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
 

@@ -33,6 +33,12 @@ def main() -> None:
         print(f"  {name:18s} -> {rep.results['T6']:.1f}  "
               f"simulated-cost {rep.charged_ms:7.1f} ms")
 
+    # --- 4. through the DAG compiler (fusion/clustering/coalescing) -----
+    opt = WukongEngine().compute(g.build(optimize=True))
+    print(f"optimized: {opt.results}  "
+          f"(executors={opt.executors_invoked}, "
+          f"kv puts={opt.kv_stats['puts']}, passes={[s.name for s in opt.optimizer]})")
+
 
 if __name__ == "__main__":
     main()

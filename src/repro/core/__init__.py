@@ -16,6 +16,14 @@ from repro.core.engine import (
 )
 from repro.core.faults import FaultConfig, SimulatedTaskFailure
 from repro.core.kvstore import CostModel, ShardedKVStore
+from repro.core.optimize import (
+    ALL_PASSES,
+    NO_PASSES,
+    CompiledDAG,
+    OptimizeConfig,
+    PassStats,
+    compile_dag,
+)
 from repro.core.schedule import StaticSchedule, generate_static_schedules
 
 __all__ = [
@@ -25,4 +33,6 @@ __all__ = [
     "PubSubEngine", "ParallelInvokerEngine", "ServerfulEngine",
     "FaultConfig", "SimulatedTaskFailure", "CostModel", "ShardedKVStore",
     "StaticSchedule", "generate_static_schedules",
+    "OptimizeConfig", "CompiledDAG", "PassStats", "compile_dag",
+    "ALL_PASSES", "NO_PASSES",
 ]

@@ -17,6 +17,7 @@ import itertools
 from typing import Any, Callable
 
 from repro.core.dag import DAG, Task, TaskRef
+from repro.core.optimize import CompiledDAG, OptimizeConfig, compile_dag
 
 
 class GraphBuilder:
@@ -52,8 +53,23 @@ class GraphBuilder:
         self._tasks[key] = Task(key, produce)
         return TaskRef(key)
 
-    def build(self) -> DAG:
-        return DAG(self._tasks.values())
+    def build(
+        self, optimize: bool | OptimizeConfig | None = None
+    ) -> DAG | CompiledDAG:
+        """Validate and freeze the DAG.
+
+        ``optimize`` runs the DAG compiler (``repro.core.optimize``)
+        before freezing: ``True`` enables every pass with defaults, an
+        ``OptimizeConfig`` selects passes individually, and ``None`` /
+        ``False`` returns the graph verbatim. Engines run a compiled
+        graph as-is (annotations included), so building optimized here
+        is equivalent to setting ``optimize`` on the engine config.
+        """
+        dag = DAG(self._tasks.values())
+        if not optimize:
+            return dag
+        cfg = optimize if isinstance(optimize, OptimizeConfig) else None
+        return compile_dag(dag, cfg)
 
 
 def delayed_graph(dsk: dict[str, Any]) -> DAG:

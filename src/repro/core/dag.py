@@ -14,7 +14,7 @@ possible).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Iterable, Mapping, Sequence
+from typing import Any, Callable, Iterable, Mapping
 
 
 class CycleError(ValueError):

@@ -39,6 +39,7 @@ from repro.core.executor import (
 from repro.core.faults import FaultConfig, FaultInjector, HeartbeatRegistry
 from repro.core.invoker import FanoutProxy, InvokerPool
 from repro.core.kvstore import CostModel, ShardedKVStore, sizeof
+from repro.core.optimize import OptimizeConfig, PassStats, ensure_compiled
 from repro.core.schedule import generate_static_schedules
 
 
@@ -61,6 +62,10 @@ class EngineConfig:
     max_concurrency: int = 512             # simulated Lambda concurrency
     speculative_poll_s: float = 0.01
     job_timeout_s: float = 600.0
+    # DAG compiler pipeline run before scheduling (repro.core.optimize);
+    # None = run the graph verbatim (the seed behavior). Each pass is
+    # independently switchable for §V-B-style factor ablations.
+    optimize: OptimizeConfig | None = None
 
 
 @dataclasses.dataclass
@@ -72,6 +77,7 @@ class JobReport:
     kv_stats: dict[str, int]
     metrics: list[dict[str, Any]]
     charged_ms: float
+    optimizer: tuple[PassStats, ...] = ()  # compiler pass report
 
 
 class _ResultWaiter:
@@ -111,6 +117,8 @@ class WukongEngine:
 
     def compute(self, dag: DAG) -> JobReport:
         cfg = self.config
+        # DAG compiler: rewrite/annotate before any schedule is generated.
+        dag = ensure_compiled(dag, cfg.optimize)
         kv = ShardedKVStore(
             n_shards=cfg.n_kv_shards,
             cost=cfg.cost,
@@ -159,14 +167,16 @@ class WukongEngine:
             heartbeats=heartbeats,
             metrics=metrics,
             inline_fanout_args=cfg.inline_fanout_args,
+            coalesce_batch=getattr(dag, "coalesce_batch", 0),
         )
 
         waiter = _ResultWaiter(kv, dag.roots)
         t0 = time.perf_counter()
-        # Initial Task Executor Invokers: one executor per static schedule,
-        # invoked in parallel (paper §IV-C).
-        for leaf, sched in schedule_set.schedules.items():
-            spawn(leaf, {}, sched, width=1)
+        # Initial Task Executor Invokers: one executor per start batch —
+        # one batch per static schedule (paper §IV-C), or fewer when the
+        # coalescing pass grouped sibling leaves.
+        for keys, sched in schedule_set.batches:
+            spawn(keys, {}, sched, width=1)
 
         stop_monitor = threading.Event()
         monitor = threading.Thread(
@@ -194,6 +204,7 @@ class WukongEngine:
             kv_stats=kv.stats.snapshot(),
             metrics=metrics.records,
             charged_ms=kv.clock.charged_ms,
+            optimizer=getattr(dag, "pass_stats", ()),
         )
 
 
@@ -219,10 +230,14 @@ def _speculative_monitor(ctx, stop, cfg, schedule_set):
             scale = cfg.cost.time_scale or 1.0
             if age_ms / scale > threshold_ms and hb.executor_id not in respawned:
                 respawned.add(hb.executor_id)
-                sched = _covering_schedule(schedule_set, hb.start_key)
-                if sched is not None:
-                    ctx.spawn(hb.start_key, {}, sched, width=1,
-                              attempt=1, parent=hb.parent)
+                # Duplicate every member of a coalesced batch, each with
+                # its own covering schedule (a sibling leaf's schedule
+                # need not cover the others' reachable sets).
+                for key in hb.start_keys or (hb.start_key,):
+                    sched = _covering_schedule(schedule_set, key)
+                    if sched is not None:
+                        ctx.spawn(key, {}, sched, width=1,
+                                  attempt=1, parent=hb.parent)
 
 
 def _covering_schedule(schedule_set, key):
@@ -248,6 +263,9 @@ class CentralizedConfig:
     num_invokers: int = 1          # >1 = parallel-invoker version
     max_concurrency: int = 512
     job_timeout_s: float = 600.0
+    # DAG compiler pipeline (chain fusion shrinks the one-Lambda-per-task
+    # graph; the executor-level passes are no-ops here). None = verbatim.
+    optimize: OptimizeConfig | None = None
 
 
 class _CentralizedEngine:
@@ -262,6 +280,7 @@ class _CentralizedEngine:
 
     def compute(self, dag: DAG) -> JobReport:
         cfg = self.config
+        dag = ensure_compiled(dag, cfg.optimize)
         kv = ShardedKVStore(
             n_shards=cfg.n_kv_shards, cost=cfg.cost,
             colocate_shards=cfg.colocate_kv_shards,
@@ -352,6 +371,7 @@ class _CentralizedEngine:
             kv_stats=kv.stats.snapshot(),
             metrics=metrics.records,
             charged_ms=kv.clock.charged_ms,
+            optimizer=getattr(dag, "pass_stats", ()),
         )
 
 
@@ -397,6 +417,7 @@ class ServerfulConfig:
     n_workers: int = 25            # paper EC2: 5 VMs x 5 worker processes
     worker_bandwidth_mbps: float = 1000.0  # direct worker<->worker TCP
     job_timeout_s: float = 600.0
+    optimize: OptimizeConfig | None = None  # DAG compiler (chain fusion)
 
 
 class ServerfulEngine:
@@ -412,6 +433,7 @@ class ServerfulEngine:
 
     def compute(self, dag: DAG) -> JobReport:
         cfg = self.config
+        dag = ensure_compiled(dag, cfg.optimize)
         clock_cost = dataclasses.replace(cfg.cost)
         kv = ShardedKVStore(n_shards=1, cost=clock_cost)  # clock + channels
         metrics = TaskMetrics()
@@ -504,6 +526,7 @@ class ServerfulEngine:
             results=results, wall_s=wall, tasks=len(dag),
             executors_invoked=0, kv_stats=kv.stats.snapshot(),
             metrics=metrics.records, charged_ms=kv.clock.charged_ms,
+            optimizer=getattr(dag, "pass_stats", ()),
         )
 
 

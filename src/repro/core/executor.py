@@ -18,6 +18,20 @@ Fault tolerance: an injected failure aborts the invocation; the engine
 re-invokes the executor from its start point with a fresh local cache,
 exactly like AWS Lambda's automatic retry (≤ 2). Idempotent KV writes and
 edge-set counters make retries and speculative duplicates safe.
+
+Optimizer integration (repro.core.optimize):
+
+- *coalescing*: an executor may receive several start keys (a batch of
+  sibling leaves, or a chunk of fan-out children). It walks them in
+  order with ONE shared local cache, so a batch whose members meet at a
+  fan-in resolves the fan-in entirely in executor memory.
+- *clustering / delayed I/O*: at fan-in nodes the schedule marks as
+  delayed, arrivals use the KV store's atomic deposit-and-increment:
+  locally-held inputs are persisted in the same round trip as the
+  counter update, and the completing arrival skips the write, carrying
+  its objects through the fan-in in local memory. Safe under retries
+  and speculation because every (re-)invocation starts from its start
+  key and recomputes the values it holds locally.
 """
 from __future__ import annotations
 
@@ -63,14 +77,18 @@ class ExecutorContext:
         metrics: TaskMetrics,
         inline_fanout_args: bool = False,
         executed_counter: list[int] | None = None,
+        coalesce_batch: int = 0,
     ):
         self.dag = dag
         self.kv = kv
-        self.spawn = spawn  # spawn(start_key, seed_cache, schedule, width)
+        self.spawn = spawn  # spawn(start_keys, seed_cache, schedule, width)
         self.faults = faults
         self.heartbeats = heartbeats
         self.metrics = metrics
         self.inline_fanout_args = inline_fanout_args
+        # >0: chunk invoked fan-out children into batches of this size
+        # (optimizer coalescing pass; 0 disables).
+        self.coalesce_batch = coalesce_batch
         self._id_lock = threading.Lock()
         self._next_id = 0
 
@@ -85,24 +103,31 @@ class TaskExecutor:
         self,
         ctx: ExecutorContext,
         schedule: StaticSchedule,
-        start_key: str,
+        start_key: "str | tuple[str, ...]",
         seed_cache: dict[str, Any] | None = None,
         attempt: int = 0,
         parent: str | None = None,
     ):
         self.ctx = ctx
         self.schedule = schedule
-        self.start_key = start_key
+        # Coalesced invocations carry several start keys; the executor
+        # walks them in order with one shared local cache.
+        self.start_keys: tuple[str, ...] = (
+            (start_key,) if isinstance(start_key, str) else tuple(start_key)
+        )
+        self.start_key = self.start_keys[0]
         self.seed_cache = dict(seed_cache or {})
         self.attempt = attempt
         # The in-edge this executor travels into its start node (set when
         # invoked at a fan-out). Required so fan-in edge ids are unique per
         # in-edge — two executors invoked into the same fan-in node from
-        # different parents must increment different edge ids.
+        # different parents must increment different edge ids. Every start
+        # key in a coalesced batch shares the same parent (same fan-out).
         self.parent = parent
         self.executor_id = ctx.next_executor_id()
         self.cache: dict[str, Any] = {}
         self.tasks_executed = 0
+        self._failed_at = 0  # index of the start key whose walk failed
 
     # -- helpers -------------------------------------------------------------
     def _edge_id(self, src: str, dst: str) -> str:
@@ -140,25 +165,43 @@ class TaskExecutor:
             current_key=self.start_key,
             started_at=time.perf_counter(),
             parent=self.parent,
+            start_keys=self.start_keys,
         )
         self.ctx.heartbeats.beat(hb)
         try:
             self._walk()
         except SimulatedTaskFailure:
+            failed = self._failed_at
             if self.attempt < self.ctx.faults.config.max_retries:
-                # Lambda automatic retry: fresh container, same event payload.
+                # Lambda automatic retry: fresh container. Only the failing
+                # start re-runs on the incremented attempt; completed walks
+                # are durable (idempotent deposits/spawns), and un-walked
+                # batch members have not consumed any of their own retry
+                # budget yet, so they respawn at attempt 0. This keeps a
+                # coalesced batch's fault tolerance identical per-task to
+                # uncoalesced execution.
                 self.ctx.spawn(
-                    self.start_key,
+                    self.start_keys[failed],
                     dict(self.seed_cache),
                     self.schedule,
                     width=1,
                     attempt=self.attempt + 1,
                     parent=self.parent,
                 )
+                rest = self.start_keys[failed + 1:]
+                if rest:
+                    self.ctx.spawn(
+                        rest,
+                        dict(self.seed_cache),
+                        self.schedule,
+                        width=1,
+                        attempt=0,
+                        parent=self.parent,
+                    )
             else:
                 self.ctx.kv.publish(
                     RESULTS_CHANNEL,
-                    {"type": "error", "key": self.start_key,
+                    {"type": "error", "key": self.start_keys[failed],
                      "error": "task failed after max retries"},
                 )
         except Exception as exc:  # task-code bug: fail the job loudly
@@ -170,19 +213,50 @@ class TaskExecutor:
             self.ctx.heartbeats.done(self.executor_id)
 
     def _walk(self) -> None:
+        self.cache.update(self.seed_cache)
+        # Coalesced batches: walk each start key in order. The local cache
+        # persists across walks, so batch members meeting at a fan-in
+        # resolve it without any KV reads.
+        for i, start in enumerate(self.start_keys):
+            self._failed_at = i
+            self._walk_from(start)
+
+    def _walk_from(self, start: str) -> None:
         dag = self.ctx.dag
         kv = self.ctx.kv
-        self.cache.update(self.seed_cache)
-        current = self.start_key
+        current = start
         prev: str | None = self.parent
 
         while True:
             # ---- fan-in operation (paper §IV-C) --------------------------
             indeg = len(dag.deps[current])
             if indeg > 1:
-                write_ms = self._publish_local_deps_of(current)
                 edge = self._edge_id(prev or "__leaf__", current)
-                count = kv.increment_dependency(_counter_id(current), edge)
+                missing: list[str] = []
+                if self.schedule.delayed(current):
+                    # Delayed I/O (optimizer clustering pass): deposit the
+                    # locally-held inputs atomically with the counter
+                    # update; the completing arrival skips the write and
+                    # keeps its objects in executor memory. The presence
+                    # of the remaining inputs rides the same reply.
+                    items = {
+                        dep: self.cache[dep]
+                        for dep in dag.deps[current]
+                        if dep in self.cache
+                    }
+                    expected = tuple(
+                        dep for dep in dag.deps[current] if dep not in items
+                    )
+                    t0 = time.perf_counter()
+                    count, missing = kv.deposit_and_increment(
+                        _counter_id(current), edge, items, expected
+                    )
+                    write_ms = (time.perf_counter() - t0) * 1e3
+                else:
+                    write_ms = self._publish_local_deps_of(current)
+                    count = kv.increment_dependency(
+                        _counter_id(current), edge
+                    )
                 if count < indeg:
                     # Some dependencies unsatisfied: store outputs and STOP.
                     # (Never wait: Lambda bills wait time, paper §IV-C.)
@@ -192,6 +266,20 @@ class TaskExecutor:
                     )
                     return
                 # Last arriver: continue through the fan-in.
+                if missing:
+                    # Delayed I/O keeps the completing arrival's value out
+                    # of the KV store, so a retried/coalesced invocation
+                    # can observe a fully-recorded counter whose missing
+                    # input lives only in the memory of the invocation
+                    # that recorded it (e.g. a later start key of this
+                    # very batch, not yet re-walked this attempt). Stop;
+                    # the invocation that recomputes the value completes
+                    # the fan-in.
+                    self.ctx.metrics.record(
+                        task=current, event="fanin_defer",
+                        executor=self.executor_id,
+                    )
+                    return
 
             # ---- task execution ------------------------------------------
             if not self.schedule.covers(current):
@@ -206,6 +294,7 @@ class TaskExecutor:
                 current_key=current,
                 started_at=time.perf_counter(),
                 parent=self.parent,
+                start_keys=self.start_keys,
             )
             self.ctx.heartbeats.beat(hb)
 
@@ -262,9 +351,18 @@ class TaskExecutor:
                 # Beyond-paper optimization: carry the value inline with the
                 # invocation payload (fan-in republish keeps correctness).
                 seed = {current: out}
-            for child in invoked:
-                self.ctx.spawn(child, dict(seed), self.schedule,
-                               width=len(invoked), parent=current)
+            # Coalescing (optimizer pass): chunk the invoked children so
+            # one invocation walks several siblings, shrinking invoker
+            # pressure on large fan-outs.
+            batch = self.ctx.coalesce_batch
+            if batch > 1:
+                groups = [tuple(invoked[i:i + batch])
+                          for i in range(0, len(invoked), batch)]
+            else:
+                groups = [(child,) for child in invoked]
+            for group in groups:
+                self.ctx.spawn(group, dict(seed), self.schedule,
+                               width=len(groups), parent=current)
             self.ctx.metrics.record(
                 task=current, event="fanout", width=len(children),
                 write_ms=write_ms, executor=self.executor_id,

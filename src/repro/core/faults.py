@@ -67,6 +67,9 @@ class ExecutorHeartbeat:
     current_key: str
     started_at: float
     parent: str | None = None
+    # Full start batch for coalesced executors (speculative duplicates
+    # must cover every member, not just the first).
+    start_keys: tuple[str, ...] = ()
 
 
 class HeartbeatRegistry:

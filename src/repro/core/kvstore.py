@@ -29,7 +29,7 @@ import pickle
 import queue
 import threading
 import time
-from typing import Any, Callable, Iterable
+from typing import Any, Iterable
 
 
 def sizeof(value: Any) -> int:
@@ -142,6 +142,7 @@ class ShardedKVStore:
                 s.lane = shared
         self.counter_mode = counter_mode
         self._counters: dict[str, set[str] | int] = {}
+        self._counter_widths: dict[str, int] = {}
         self._counter_lock = threading.Lock()
         self._channels: dict[str, list[queue.Queue]] = {}
         self._chan_lock = threading.Lock()
@@ -214,10 +215,27 @@ class ShardedKVStore:
     # -- fan-in dependency counters (paper §IV-C) ---------------------------
     def register_counter(self, counter_id: str, width: int) -> None:
         with self._counter_lock:
+            self._counter_widths[counter_id] = width
             if self.counter_mode == "edge_set":
                 self._counters.setdefault(counter_id, set())
             else:
                 self._counters.setdefault(counter_id, 0)
+
+    def _record_edge_locked(self, counter_id: str, edge_id: str) -> int:
+        """Record a satisfied in-edge; return the new count. Caller must
+        hold ``_counter_lock`` (shared by both fan-in protocols so the
+        edge_set/INCR semantics can never diverge between them)."""
+        cur = self._counters.get(counter_id)
+        if cur is None:
+            cur = set() if self.counter_mode == "edge_set" else 0
+        if self.counter_mode == "edge_set":
+            assert isinstance(cur, set)
+            cur = cur | {edge_id}
+            self._counters[counter_id] = cur
+            return len(cur)
+        count = int(cur) + 1
+        self._counters[counter_id] = count
+        return count
 
     def increment_dependency(self, counter_id: str, edge_id: str) -> int:
         """Atomically record a satisfied in-edge; return the new count.
@@ -230,20 +248,76 @@ class ShardedKVStore:
         """
         self.clock.charge(self.cost.kv_base_ms)
         with self._counter_lock:
-            cur = self._counters.get(counter_id)
-            if cur is None:
-                cur = set() if self.counter_mode == "edge_set" else 0
-            if self.counter_mode == "edge_set":
-                assert isinstance(cur, set)
-                cur = cur | {edge_id}
-                self._counters[counter_id] = cur
-                count = len(cur)
-            else:
-                count = int(cur) + 1
-                self._counters[counter_id] = count
+            count = self._record_edge_locked(counter_id, edge_id)
         with self._stats_lock:
             self.stats.incrs += 1
         return count
+
+    def deposit_and_increment(
+        self,
+        counter_id: str,
+        edge_id: str,
+        items: "dict[str, Any]",
+        expected: "tuple[str, ...]" = (),
+    ) -> "tuple[int, list[str]]":
+        """Atomic fan-in arrival with delayed I/O (the optimizer's
+        clustering pass; Wukong follow-up's locality optimization).
+
+        Records ``edge_id`` on the dependency counter and — unless this
+        arrival completes the fan-in — persists ``items`` (the caller's
+        locally-held input objects) in the *same* round trip, saving the
+        separate ``set`` round trip of the classic publish-then-increment
+        protocol. The completing arrival skips the write entirely: its
+        objects stay in executor memory and never touch the network.
+
+        ``expected`` lists keys the caller will need if it completes the
+        fan-in; the keys among them absent from the store are reported
+        back in the same reply (no extra round trip), so a completing
+        arrival can detect inputs that exist only in another invocation's
+        memory (retried/coalesced executors) and defer.
+
+        Counters must be registered (width known) for the completing
+        arrival to be detected; unregistered counters always store, which
+        degrades gracefully to the classic protocol. Edge-set mode keeps
+        the op idempotent: a retried arrival on a recorded edge re-reads
+        the same count, and its stores are if-absent.
+        Returns ``(count, missing_expected_keys)``.
+        """
+        self.clock.charge(self.cost.kv_base_ms)  # one combined round trip
+        stored: dict[str, Any] = {}
+        missing: list[str] = []
+        with self._counter_lock:
+            width = self._counter_widths.get(counter_id)
+            count = self._record_edge_locked(counter_id, edge_id)
+            completing = width is not None and count >= width
+            if not completing:
+                # Store before the increment becomes visible to the
+                # completing arrival (it reads these keys right after).
+                for key, value in items.items():
+                    shard = self._shard(key)
+                    with shard.lock:
+                        if key not in shard.data:
+                            shard.data[key] = value
+                            stored[key] = value
+            for key in expected:
+                shard = self._shard(key)
+                with shard.lock:
+                    if key not in shard.data:
+                        missing.append(key)
+        with self._stats_lock:
+            self.stats.incrs += 1
+            self.stats.puts += len(stored)
+            self.stats.bytes_written += sum(
+                sizeof(v) for v in stored.values()
+            )
+        # Transfer time is charged outside the counter lock: the bytes are
+        # already durable; only the simulated clock accounting remains.
+        for key, value in stored.items():
+            t_ms = self.cost.transfer_ms(sizeof(value))
+            if t_ms > 0:
+                with self._shard(key).lane:
+                    self.clock.charge(t_ms)
+        return count, missing
 
     def counter_value(self, counter_id: str) -> int:
         with self._counter_lock:

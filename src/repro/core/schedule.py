@@ -24,7 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 import pickle
-from typing import Iterator
+from typing import Iterator, Mapping
 
 from repro.core.dag import DAG
 
@@ -37,14 +37,31 @@ class StaticSchedule:
     executor may only *execute* tasks in ``nodes``; in-edges arriving from
     other schedules' regions are known by key only (their outputs are read
     from the KV store after the fan-in counter resolves).
+
+    When the DAG was run through the optimizer (``repro.core.optimize``)
+    the schedule additionally ships the compiler annotations its executor
+    consumes at runtime:
+
+    ``clusters``       — member node -> cluster id (head of the node's
+                         static become-path; the clustering pass).
+    ``delayed_fanins`` — member fan-in nodes where arrivals use the atomic
+                         deposit-and-increment protocol so the completing
+                         arriver's locally-held inputs never travel to the
+                         KV store (delayed I/O).
     """
 
     leaf: str
     nodes: frozenset[str]
     code_size_bytes: int  # serialized size of shipped task code (cost model)
+    clusters: Mapping[str, str] = dataclasses.field(default_factory=dict)
+    delayed_fanins: frozenset[str] = frozenset()
 
     def covers(self, key: str) -> bool:
         return key in self.nodes
+
+    def delayed(self, key: str) -> bool:
+        """True if fan-in arrivals at ``key`` delay KV writes (clustering)."""
+        return key in self.delayed_fanins
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,10 +71,16 @@ class ScheduleSet:
     The Storage Manager receives the DAG and the static schedules at the
     start of workflow processing (paper §IV-D); the counter ids created
     here are registered with the KV store before any executor launches.
+
+    ``batches`` lists the initial executor invocations: one entry per
+    invocation, as ``(start_keys, schedule)``. Without the coalescing
+    pass every batch is a single leaf with its own schedule; with it,
+    sibling leaves share one invocation and a merged schedule.
     """
 
     dag: DAG
     schedules: dict[str, StaticSchedule]  # leaf -> schedule
+    batches: tuple[tuple[tuple[str, ...], StaticSchedule], ...] = ()
 
     def fan_in_counters(self) -> dict[str, int]:
         """counter id -> number of in-edges, for every true fan-in node."""
@@ -73,15 +96,43 @@ def _counter_id(key: str) -> str:
 
 
 def generate_static_schedules(dag: DAG) -> ScheduleSet:
-    """One schedule per leaf node, via DFS reachability (paper §IV-B)."""
+    """One schedule per leaf node, via DFS reachability (paper §IV-B).
+
+    Optimizer annotations (``CompiledDAG``) are sliced into each schedule;
+    a plain ``DAG`` yields annotation-free schedules and singleton batches.
+    """
+    clusters: Mapping[str, str] = getattr(dag, "clusters", {})
+    delayed: frozenset[str] = getattr(dag, "delayed_fanins", frozenset())
+    leaf_batches = getattr(dag, "leaf_batches", None) or tuple(
+        (leaf,) for leaf in dag.leaves
+    )
     schedules: dict[str, StaticSchedule] = {}
     for leaf in dag.leaves:
         nodes = dag.reachable_from(leaf)
-        size = _estimate_code_size(dag, nodes)
-        schedules[leaf] = StaticSchedule(
-            leaf=leaf, nodes=frozenset(nodes), code_size_bytes=size
-        )
-    return ScheduleSet(dag=dag, schedules=schedules)
+        schedules[leaf] = _make_schedule(dag, leaf, nodes, clusters, delayed)
+    batches = []
+    for keys in leaf_batches:
+        if len(keys) == 1:
+            batches.append((tuple(keys), schedules[keys[0]]))
+        else:
+            union: set[str] = set()
+            for k in keys:
+                union |= schedules[k].nodes
+            batches.append(
+                (tuple(keys),
+                 _make_schedule(dag, keys[0], union, clusters, delayed))
+            )
+    return ScheduleSet(dag=dag, schedules=schedules, batches=tuple(batches))
+
+
+def _make_schedule(dag, leaf, nodes, clusters, delayed) -> StaticSchedule:
+    return StaticSchedule(
+        leaf=leaf,
+        nodes=frozenset(nodes),
+        code_size_bytes=_estimate_code_size(dag, nodes),
+        clusters={k: clusters[k] for k in nodes if k in clusters},
+        delayed_fanins=frozenset(k for k in nodes if k in delayed),
+    )
 
 
 def _estimate_code_size(dag: DAG, nodes: set[str]) -> int:

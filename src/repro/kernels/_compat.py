@@ -1,0 +1,12 @@
+"""Pallas API compatibility across jax versions.
+
+jax >= 0.5 renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``;
+the kernels target the new name, so alias it on older jaxlib.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams"
+)

@@ -30,7 +30,6 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import ARCHS, get_config
 from repro.launch import mesh as mesh_lib

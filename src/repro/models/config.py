@@ -10,7 +10,6 @@ lowered copy of the layer HLO (critical for compile time and HLO size at
 from __future__ import annotations
 
 import dataclasses
-import math
 
 
 @dataclasses.dataclass(frozen=True)

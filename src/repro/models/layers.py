@@ -11,12 +11,10 @@ oracle and the CPU/dry-run path.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.models.config import ModelConfig
 

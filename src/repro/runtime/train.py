@@ -9,7 +9,6 @@ the knob §Perf turns for memory-bound cells).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

@@ -1,8 +1,12 @@
 """Data pipeline: determinism, host sharding, packing invariants."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
 
 from repro.data import DataConfig, TokenPipeline, pack_documents
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property tests skip without the dev extra
+    from _hypothesis_fallback import given, settings, st
 
 
 def cfg(**kw):

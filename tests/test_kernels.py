@@ -3,7 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property tests skip without the dev extra
+    from _hypothesis_fallback import given, settings, st
 
 from repro.kernels.decode_attention import decode_attention
 from repro.kernels.flash_attention import flash_attention
@@ -120,7 +124,6 @@ def test_flash_attention_matches_model_sdpa():
 def test_mlstm_kernel_matches_model_layer():
     """Kernel output matches repro.models.ssm.mlstm's inner computation
     (same gating math, zero initial state)."""
-    import dataclasses
     from repro.configs import get_config, reduced
     from repro.models import ssm
 

@@ -1,0 +1,344 @@
+"""DAG compiler passes: correctness equivalence + pass-specific invariants.
+
+The central property: an optimized DAG computes exactly what a sequential
+topological evaluation of the ORIGINAL graph computes, on every engine and
+under every pass combination. Pass-specific invariants: fusion never
+crosses a fan-in/fan-out boundary, clustering strictly reduces KV ``set``
+counts, coalescing strictly reduces executor invocations.
+"""
+import itertools
+import operator
+import random
+
+import pytest
+
+from repro.core import (
+    ALL_PASSES,
+    NO_PASSES,
+    CompiledDAG,
+    EngineConfig,
+    FaultConfig,
+    GraphBuilder,
+    OptimizeConfig,
+    ParallelInvokerEngine,
+    PubSubEngine,
+    ServerfulConfig,
+    ServerfulEngine,
+    StrawmanEngine,
+    WukongEngine,
+    compile_dag,
+)
+from repro.core.dag import TaskRef
+from repro.core.optimize import (
+    coalesce_leaves,
+    compute_clusters,
+    find_chains,
+    fuse_linear_chains,
+    fusible_edges,
+)
+
+
+def seq_eval(dag):
+    vals = {}
+    for k in dag.topological_order():
+        t = dag.tasks[k]
+        args = [vals[a.key] if isinstance(a, TaskRef) else a for a in t.args]
+        kwargs = {kk: vals[v.key] if isinstance(v, TaskRef) else v
+                  for kk, v in t.kwargs.items()}
+        vals[k] = t.fn(*args, **kwargs)
+    return {k: vals[k] for k in dag.roots}
+
+
+# -- DAG zoo ---------------------------------------------------------------
+
+
+def chain_dag(n=20):
+    """A pure linear chain (all interior edges fusible)."""
+    g = GraphBuilder()
+    cur = g.add(lambda: 1, name="start")
+    for i in range(n):
+        cur = g.add(lambda x: x + 1, cur, name=f"c{i}")
+    return g.build()
+
+
+def chained_fanin_dag(links=8):
+    """A chain of fan-in diamonds: x_i = h(f(x_{i-1}), g(x_{i-1})).
+
+    Every link has a width-2 fan-out followed by a width-2 fan-in, so no
+    edge is fusible — isolating the clustering pass's delayed I/O.
+    """
+    g = GraphBuilder()
+    cur = g.add(lambda: 1, name="x0")
+    for i in range(links):
+        a = g.add(lambda x: x + 1, cur, name=f"a{i}")
+        b = g.add(lambda x: x * 2, cur, name=f"b{i}")
+        cur = g.add(operator.add, a, b, name=f"x{i + 1}")
+    return g.build()
+
+
+def tree_dag(n):
+    g = GraphBuilder()
+    level = [g.add((lambda v: (lambda: v))(i), name=f"leaf-{i}")
+             for i in range(n)]
+    d = 0
+    while len(level) > 1:
+        level = [g.add(operator.add, level[i], level[i + 1],
+                       name=f"add-{d}-{i // 2}")
+                 for i in range(0, len(level), 2)]
+        d += 1
+    return g.build()
+
+
+def random_dag(seed: int, n: int):
+    rng = random.Random(seed)
+    g = GraphBuilder()
+    refs = []
+    for i in range(n):
+        k = rng.randint(0, min(4, len(refs)))
+        deps = rng.sample(refs, k) if k else []
+        if deps:
+            refs.append(g.add(lambda *xs: sum(xs) + 1, *deps, name=f"n{i}"))
+        else:
+            refs.append(g.add((lambda v: (lambda: v))(i), name=f"n{i}"))
+    return g.build()
+
+
+def mixed_dag():
+    """Chains + fan-outs + fan-ins + a wide sibling layer in one graph."""
+    g = GraphBuilder()
+    src = g.add(lambda: 2, name="src")
+    pre = g.add(lambda x: x + 3, src, name="pre")      # fusible src->pre
+    outs = []
+    for i in range(12):
+        h = g.add(lambda x, i=i: x * i, pre, name=f"h{i}")
+        t = g.add(lambda x: x - 1, h, name=f"t{i}")    # fusible h->t
+        outs.append(t)
+    mid = g.add(lambda *xs: sum(xs), *outs, name="mid")
+    g.add(lambda x: x % 97, mid, name="root")          # fusible mid->root
+    return g.build()
+
+
+ENGINES = [
+    ("wukong", lambda o: WukongEngine(EngineConfig(optimize=o))),
+    ("strawman", lambda o: StrawmanEngine(optimize=o)),
+    ("pubsub", lambda o: PubSubEngine(optimize=o)),
+    ("parallel_invoker", lambda o: ParallelInvokerEngine(optimize=o)),
+    ("serverful",
+     lambda o: ServerfulEngine(ServerfulConfig(optimize=o))),
+]
+
+PASS_COMBOS = [
+    OptimizeConfig(fuse_chains=f, cluster_tasks=c, coalesce_fanouts=co)
+    for f, c, co in itertools.product([False, True], repeat=3)
+]
+
+
+# -- equivalence: optimized == sequential, on every engine ------------------
+
+
+@pytest.mark.parametrize("name,factory", ENGINES)
+def test_all_engines_all_passes_tree(name, factory):
+    want = seq_eval(tree_dag(32))
+    assert factory(ALL_PASSES).compute(tree_dag(32)).results == want
+
+
+@pytest.mark.parametrize("name,factory", ENGINES)
+def test_all_engines_all_passes_mixed(name, factory):
+    want = seq_eval(mixed_dag())
+    assert factory(ALL_PASSES).compute(mixed_dag()).results == want
+
+
+@pytest.mark.parametrize("combo", PASS_COMBOS,
+                         ids=lambda c: f"fuse{int(c.fuse_chains)}-"
+                                       f"clus{int(c.cluster_tasks)}-"
+                                       f"coal{int(c.coalesce_fanouts)}")
+def test_wukong_every_pass_combo_random_dags(combo):
+    for seed in (3, 17, 42):
+        dag = random_dag(seed, 45)
+        want = seq_eval(dag)
+        got = WukongEngine(
+            EngineConfig(optimize=combo)).compute(random_dag(seed, 45))
+        assert got.results == want
+
+
+def test_chain_and_fanin_shapes_every_combo():
+    for build in (chain_dag, chained_fanin_dag):
+        want = seq_eval(build())
+        for combo in PASS_COMBOS:
+            rep = WukongEngine(EngineConfig(optimize=combo)).compute(build())
+            assert rep.results == want, combo
+
+
+def test_prebuilt_compiled_dag_equivalent_to_engine_config():
+    g = GraphBuilder()
+    cur = g.add(lambda: 5, name="s")
+    for i in range(6):
+        cur = g.add(lambda x: x * 2, cur, name=f"d{i}")
+    via_build = WukongEngine().compute(g.build(optimize=True))
+    via_config = WukongEngine(
+        EngineConfig(optimize=ALL_PASSES)).compute(g.build())
+    assert via_build.results == via_config.results == {"d5": 5 * 64}
+
+
+# -- pass invariants: fusion ------------------------------------------------
+
+
+def test_fusion_collapses_pure_chain_to_one_task():
+    dag = chain_dag(20)
+    compiled = compile_dag(dag, OptimizeConfig(
+        cluster_tasks=False, coalesce_fanouts=False))
+    assert isinstance(compiled, CompiledDAG)
+    assert len(compiled) == 1
+    assert compiled.roots == dag.roots
+    assert compiled.fused["c19"][0] == "start"
+
+
+def test_fusion_never_crosses_fanin_fanout_boundary():
+    for build in (mixed_dag, lambda: random_dag(11, 60), chained_fanin_dag):
+        dag = build()
+        for chain in find_chains(dag):
+            for u, v in zip(chain, chain[1:]):
+                assert dag.fan_out_degree(u) == 1, (u, v)
+                assert dag.fan_in_degree(v) == 1, (u, v)
+
+
+def test_fusion_no_op_on_tree():
+    # every tree edge targets a width-2 fan-in: nothing may fuse
+    assert fusible_edges(tree_dag(16)) == set()
+
+
+def test_fusion_respects_max_len():
+    dag = chain_dag(20)  # 21 nodes
+    _, provenance = fuse_linear_chains(dag, max_len=4)
+    assert all(len(keys) <= 4 for keys in provenance.values())
+    compiled = compile_dag(dag, OptimizeConfig(
+        max_fusion_len=4, cluster_tasks=False, coalesce_fanouts=False))
+    assert len(compiled) == 6  # ceil(21 / 4) segments
+    rep = WukongEngine().compute(compiled)
+    assert rep.results == seq_eval(dag)
+
+
+def test_fused_task_preserves_kwargs_and_literals():
+    g = GraphBuilder()
+    a = g.add(lambda base, bump=0: base + bump, 10, bump=5, name="a")
+    g.add(lambda x, scale=1: x * scale, a, scale=3, name="b")
+    dag = g.build()
+    rep = WukongEngine(EngineConfig(optimize=ALL_PASSES)).compute(dag)
+    assert rep.results == {"b": 45}
+
+
+# -- pass invariants: clustering (delayed I/O) ------------------------------
+
+
+def test_clustering_reduces_kv_sets_on_chain_dag():
+    """The delayed-I/O invariant on a chain of fan-in links: with fusion
+    and coalescing off, clustering alone must strictly reduce KV ``set``
+    operations (the completing arriver never writes its held value)."""
+    clustered = OptimizeConfig(fuse_chains=False, coalesce_fanouts=False,
+                               cluster_tasks=True)
+    base = WukongEngine().compute(chained_fanin_dag(8))
+    opt = WukongEngine(
+        EngineConfig(optimize=clustered)).compute(chained_fanin_dag(8))
+    assert opt.results == base.results == seq_eval(chained_fanin_dag(8))
+    # one saved set per fan-in link
+    assert opt.kv_stats["puts"] <= base.kv_stats["puts"] - 8
+
+
+def test_cluster_annotations():
+    dag = chained_fanin_dag(4)
+    clusters, delayed = compute_clusters(dag)
+    assert set(clusters) == set(dag.tasks)          # total assignment
+    assert delayed == {f"x{i}" for i in range(1, 5)}  # every fan-in node
+    # a fan-in node shares its cluster with its primary (first) parent
+    for k in delayed:
+        assert clusters[k] == clusters[dag.deps[k][0]]
+
+
+def test_delayed_fanins_safe_under_retries():
+    dag = tree_dag(16)
+    cfg = EngineConfig(optimize=ALL_PASSES, faults=FaultConfig(
+        task_failure_prob=0.04, max_retries=2, seed=11))
+    rep = WukongEngine(cfg).compute(dag)
+    assert rep.results == seq_eval(tree_dag(16))
+
+
+# -- pass invariants: coalescing --------------------------------------------
+
+
+def test_coalescing_groups_only_true_siblings():
+    dag = tree_dag(16)  # leaf pairs share a combine; pairs don't mix
+    batches = coalesce_leaves(dag, batch=7)
+    for b in batches:
+        sigs = {tuple(sorted(dag.children[k])) for k in b}
+        assert len(sigs) == 1
+        assert len(b) <= 7
+    assert sorted(k for b in batches for k in b) == sorted(dag.leaves)
+
+
+def test_coalescing_reduces_invocations():
+    coal = OptimizeConfig(fuse_chains=False, cluster_tasks=False,
+                          coalesce_fanouts=True)
+    base = WukongEngine().compute(tree_dag(64))
+    opt = WukongEngine(EngineConfig(optimize=coal)).compute(tree_dag(64))
+    assert opt.results == base.results
+    assert opt.executors_invoked < base.executors_invoked
+
+
+def test_coalescing_chunks_wide_fanout_below_proxy_threshold():
+    g = GraphBuilder()
+    src = g.add(lambda: 3, name="src")
+    outs = [g.add(lambda x, i=i: x * i, src, name=f"m{i}")
+            for i in range(32)]
+    g.add(lambda *xs: sum(xs), *outs, name="total")
+    dag = g.build()
+    base = WukongEngine().compute(dag)
+    opt = WukongEngine(EngineConfig(optimize=ALL_PASSES)).compute(dag)
+    assert base.results == opt.results
+    assert opt.results["total"] == 3 * sum(range(32))
+    assert opt.executors_invoked < base.executors_invoked
+
+
+# -- the acceptance criterion ----------------------------------------------
+
+
+def test_tree_reduction_64_wide_all_passes_beats_unoptimized():
+    """ISSUE acceptance: on a 64-wide tree reduction, all passes enabled
+    must show strictly fewer KV ``set`` ops and lower simulated charged_ms
+    than the unoptimized run, with results matching sequential evaluation
+    on every engine."""
+    from repro.apps.tree_reduction import tree_reduction_dag
+
+    def dag64():
+        return tree_reduction_dag(128)  # 64 leaf tasks
+
+    want = seq_eval(dag64())
+    (root_key,) = want.keys()
+
+    base = WukongEngine().compute(dag64())
+    opt = WukongEngine(EngineConfig(optimize=ALL_PASSES)).compute(dag64())
+    assert opt.kv_stats["puts"] < base.kv_stats["puts"]
+    assert opt.charged_ms < base.charged_ms
+
+    for name, factory in ENGINES:
+        got = factory(ALL_PASSES).compute(dag64()).results
+        assert got[root_key][0] == want[root_key][0], name
+
+
+def test_pass_stats_reported():
+    rep = WukongEngine(
+        EngineConfig(optimize=ALL_PASSES)).compute(mixed_dag())
+    names = [s.name for s in rep.optimizer]
+    assert names == ["fuse_chains", "cluster_tasks", "coalesce_fanouts"]
+    fuse = rep.optimizer[0]
+    assert fuse.after_tasks < fuse.before_tasks
+
+
+def test_no_passes_is_identity_pipeline():
+    dag = mixed_dag()
+    compiled = compile_dag(dag, NO_PASSES)
+    assert len(compiled) == len(dag)
+    assert compiled.clusters == {}
+    assert compiled.delayed_fanins == frozenset()
+    assert [len(b) for b in compiled.leaf_batches] == [1] * len(dag.leaves)
+    rep = WukongEngine().compute(compiled)
+    assert rep.results == seq_eval(dag)
