@@ -67,6 +67,37 @@ def wukong_optimized(scale: float = SIM_SCALE,
                                      **kw))
 
 
+# -- data-plane factor series (striping + batched round trips) --------------
+# The paper's data-intensive workloads move GB-scale blocks; at this
+# container's toy block sizes the default 600 MB/s lane makes transfers
+# negligible next to invoke_ms, so the striped-vs-unstriped comparison
+# emulates the paper's regime by scaling the per-shard lane down. Both
+# series share the regime — the ONLY difference between them is the two
+# data-plane factors, so the comparison isolates exactly what §V-B-style
+# factor analysis requires.
+DATAPLANE_KV_MBPS = 5.0          # per-shard lane in the emulated regime
+DATAPLANE_STRIPE_BYTES = 8 << 10  # stripe target: a 64 KiB GEMM block -> 8
+
+
+def wukong_dataplane(scale: float = SIM_SCALE, **kw: Any) -> WukongEngine:
+    """Optimized WUKONG with the PR 2 data plane ON: striped large
+    objects + batched (mget / counter-registration) round trips."""
+    c = cost(scale, kv_bandwidth_mbps=DATAPLANE_KV_MBPS,
+             stripe_threshold_bytes=DATAPLANE_STRIPE_BYTES)
+    return WukongEngine(EngineConfig(cost=c, optimize=ALL_PASSES,
+                                     batch_kv_round_trips=True, **kw))
+
+
+def wukong_dataplane_off(scale: float = SIM_SCALE, **kw: Any) -> WukongEngine:
+    """Optimized WUKONG with the PR 1 data plane: one shard lane per
+    object (striping off), one round trip per key (batching off). Same
+    emulated regime as ``wukong_dataplane`` — the ablation baseline."""
+    c = cost(scale, kv_bandwidth_mbps=DATAPLANE_KV_MBPS,
+             stripe_threshold_bytes=0)
+    return WukongEngine(EngineConfig(cost=c, optimize=ALL_PASSES,
+                                     batch_kv_round_trips=False, **kw))
+
+
 def parallel_invoker_optimized(scale: float = SIM_SCALE,
                                n: int = 20) -> ParallelInvokerEngine:
     """Centralized best-iteration with the DAG compiler (chain fusion
@@ -120,6 +151,7 @@ def timed(engine, dag, repeats: int = 1,
         "tasks": rep.tasks,
         "executors": rep.executors_invoked,
         "kv_bytes": rep.kv_stats["bytes_read"] + rep.kv_stats["bytes_written"],
+        "kv_stats": rep.kv_stats,
         "charged_ms": rep.charged_ms,
         "metrics": rep.metrics,
     }

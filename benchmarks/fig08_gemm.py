@@ -4,6 +4,13 @@ Paper claims: WUKONG >2x faster than Dask (EC2) and >5x faster than Dask
 (Laptop) at 10k x 10k; the largest sizes OOM the serverful setups while
 WUKONG scales out elastically (we mark the laptop DNF by worker-memory
 model rather than crashing the container).
+
+Beyond-paper series: ``wukong_striped`` vs ``wukong_unstriped`` isolate
+the PR 2 data plane (striped large objects + batched KV round trips) in
+the emulated data-intensive regime — §V-B identifies intermediate-data
+movement as the dominant overhead for GEMM, and the Wukong follow-up's
+chunked storage is the fix this pair ablates. Both run the identical
+optimized engine and cost regime; only the two data-plane factors differ.
 """
 from __future__ import annotations
 
@@ -16,6 +23,8 @@ def run(sizes=((512, 128), (1024, 128), (2048, 128))) -> list[dict]:
     for n, bs in sizes:
         for label, eng in [
             ("wukong", common.wukong()),
+            ("wukong_striped", common.wukong_dataplane()),
+            ("wukong_unstriped", common.wukong_dataplane_off()),
             ("dask_ec2", common.serverful_ec2()),
             ("dask_laptop", common.serverful_laptop()),
         ]:

@@ -3,6 +3,10 @@
 Paper claims: both WUKONG and Dask (EC2) dwarf the laptop; Dask (EC2)
 wins small sizes, WUKONG overtakes as rows grow (parallelism outweighs
 communication).
+
+Beyond-paper series: ``wukong_striped`` vs ``wukong_unstriped`` — the
+PR 2 data-plane ablation (striping + batched round trips) in the
+emulated data-intensive regime; see fig08_gemm.
 """
 from __future__ import annotations
 
@@ -16,6 +20,8 @@ def run(row_sizes=(4096, 8192, 16384), cols: int = 64,
     for nrows in row_sizes:
         for label, eng in [
             ("wukong", common.wukong()),
+            ("wukong_striped", common.wukong_dataplane()),
+            ("wukong_unstriped", common.wukong_dataplane_off()),
             ("dask_ec2", common.serverful_ec2()),
             ("dask_laptop", common.serverful_laptop()),
         ]:

@@ -4,6 +4,12 @@ Paper claims: Dask (EC2) wins small sizes; WUKONG wins the largest
 (3.1x at 100k x 100k); with an ideally-fast intermediate store WUKONG
 executes in a fraction of the time (95.5% less than Dask EC2 at the
 largest size) — bounding how much of WUKONG's time is KV-store traffic.
+
+Beyond-paper series: ``wukong_striped`` vs ``wukong_unstriped`` — the
+PR 2 data-plane ablation (striping + batched round trips) in the
+emulated data-intensive regime; it sits between ``wukong`` and
+``wukong_ideal``, showing how much of the ideal-storage gap the real
+data-plane optimizations close. See fig08_gemm.
 """
 from __future__ import annotations
 
@@ -16,6 +22,8 @@ def run(sizes=(512, 1024, 2048, 4096), n_blocks: int = 8) -> list[dict]:
     for n in sizes:
         for label, eng, kw in [
             ("wukong", common.wukong(), {}),
+            ("wukong_striped", common.wukong_dataplane(), {}),
+            ("wukong_unstriped", common.wukong_dataplane_off(), {}),
             ("wukong_ideal", common.wukong(), {"ideal_storage": True}),
             ("dask_ec2", common.serverful_ec2(), {}),
             ("dask_laptop", common.serverful_laptop(), {}),

@@ -103,11 +103,10 @@ class DAG:
 
     # -- utilities ---------------------------------------------------------
     def _check_acyclic(self) -> None:
-        order = self.topological_order()
-        if len(order) != len(self.tasks):
-            raise CycleError("task graph contains a cycle")
-
-    def topological_order(self) -> list[str]:
+        # The acyclicity check already computes a full topological order;
+        # cache it so the host-side hot paths that re-sort the graph
+        # (compiler passes, schedule generation, critical-path metrics)
+        # pay O(V+E) once per DAG instead of once per call.
         indeg = {k: len(self.deps[k]) for k in self.tasks}
         stack = [k for k in self.tasks if indeg[k] == 0]
         out: list[str] = []
@@ -118,7 +117,12 @@ class DAG:
                 indeg[c] -= 1
                 if indeg[c] == 0:
                     stack.append(c)
-        return out
+        if len(out) != len(self.tasks):
+            raise CycleError("task graph contains a cycle")
+        self._topo_order: tuple[str, ...] = tuple(out)
+
+    def topological_order(self) -> list[str]:
+        return list(self._topo_order)
 
     def reachable_from(self, start: str) -> set[str]:
         """All nodes reachable from ``start`` following out-edges (paper:

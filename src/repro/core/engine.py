@@ -59,6 +59,12 @@ class EngineConfig:
     proxy_threshold: int = 8               # max_task_fanout
     use_proxy: bool = True                 # §V-B factor
     inline_fanout_args: bool = False       # beyond-paper locality opt
+    # Data-plane factor (Lambada-style batching): executors gather their
+    # inputs with one pipelined mget (one kv_base_ms per shard batch)
+    # instead of one round trip per key. Striping, the other data-plane
+    # factor, is configured on the CostModel (stripe_threshold_bytes /
+    # max_stripes) since it is a property of the storage substrate.
+    batch_kv_round_trips: bool = True
     max_concurrency: int = 512             # simulated Lambda concurrency
     speculative_poll_s: float = 0.01
     job_timeout_s: float = 600.0
@@ -126,9 +132,15 @@ class WukongEngine:
             counter_mode=cfg.counter_mode,
         )
         schedule_set = generate_static_schedules(dag)
-        # Storage Manager registers the fan-in counters at workflow start.
-        for cid, width in schedule_set.fan_in_counters().items():
-            kv.register_counter(cid, width)
+        # Storage Manager registers the fan-in counters at workflow start
+        # — in ONE batched round trip (Lambada-style request batching),
+        # or one per counter when the batching factor is ablated off.
+        counters = schedule_set.fan_in_counters()
+        if cfg.batch_kv_round_trips:
+            kv.register_counters(counters)
+        else:
+            for cid, width in counters.items():
+                kv.register_counter(cid, width)
 
         metrics = TaskMetrics()
         heartbeats = HeartbeatRegistry()
@@ -168,6 +180,7 @@ class WukongEngine:
             metrics=metrics,
             inline_fanout_args=cfg.inline_fanout_args,
             coalesce_batch=getattr(dag, "coalesce_batch", 0),
+            batch_kv_round_trips=cfg.batch_kv_round_trips,
         )
 
         waiter = _ResultWaiter(kv, dag.roots)
@@ -232,19 +245,14 @@ def _speculative_monitor(ctx, stop, cfg, schedule_set):
                 respawned.add(hb.executor_id)
                 # Duplicate every member of a coalesced batch, each with
                 # its own covering schedule (a sibling leaf's schedule
-                # need not cover the others' reachable sets).
+                # need not cover the others' reachable sets). The schedule
+                # set's covering index makes this O(1) per respawn instead
+                # of a linear scan over every schedule.
                 for key in hb.start_keys or (hb.start_key,):
-                    sched = _covering_schedule(schedule_set, key)
+                    sched = schedule_set.covering_schedule(key)
                     if sched is not None:
                         ctx.spawn(key, {}, sched, width=1,
                                   attempt=1, parent=hb.parent)
-
-
-def _covering_schedule(schedule_set, key):
-    for sched in schedule_set.schedules.values():
-        if sched.covers(key):
-            return sched
-    return None
 
 
 # ---------------------------------------------------------------------------

@@ -78,6 +78,7 @@ class ExecutorContext:
         inline_fanout_args: bool = False,
         executed_counter: list[int] | None = None,
         coalesce_batch: int = 0,
+        batch_kv_round_trips: bool = True,
     ):
         self.dag = dag
         self.kv = kv
@@ -89,6 +90,9 @@ class ExecutorContext:
         # >0: chunk invoked fan-out children into batches of this size
         # (optimizer coalescing pass; 0 disables).
         self.coalesce_batch = coalesce_batch
+        # Gather task inputs with one pipelined mget per task (one
+        # kv_base_ms per shard batch) instead of one get per key.
+        self.batch_kv_round_trips = batch_kv_round_trips
         self._id_lock = threading.Lock()
         self._next_id = 0
 
@@ -146,10 +150,27 @@ class TaskExecutor:
         task = self.ctx.dag.tasks[key]
         t0 = time.perf_counter()
 
+        # Remote inputs (not in the local cache) are fetched in ONE
+        # pipelined mget — keys grouped by shard, one base round trip per
+        # shard batch — instead of one round trip per key (the fan-in
+        # path's completing arrival reads all its siblings' outputs here).
+        fetched: dict[str, Any] = {}
+        if self.ctx.batch_kv_round_trips:
+            need: list[str] = []
+            for a in list(task.args) + list(task.kwargs.values()):
+                if (isinstance(a, TaskRef) and a.key not in self.cache
+                        and a.key not in fetched):
+                    fetched[a.key] = None
+                    need.append(a.key)
+            if need:
+                fetched = dict(zip(need, self.ctx.kv.mget(need)))
+
         def resolve(a: Any) -> Any:
             if isinstance(a, TaskRef):
                 if a.key in self.cache:
                     return self.cache[a.key]  # data locality: no network
+                if a.key in fetched:
+                    return fetched[a.key]
                 return self.ctx.kv.get(a.key)
             return a
 
@@ -309,12 +330,15 @@ class TaskExecutor:
             compute_ms = (time.perf_counter() - t0) * 1e3
             self.cache[current] = out
             self.tasks_executed += 1
+            # One sizeof walk per output, reused by metrics and as the
+            # KV write's size hint (the store records it per key).
+            out_nbytes = sizeof(out)
 
             children = dag.children[current]
             # ---- sink: final result --------------------------------------
             if not children:
                 t0 = time.perf_counter()
-                kv.put_if_absent(current, out)
+                kv.put_if_absent(current, out, nbytes=out_nbytes)
                 write_ms = (time.perf_counter() - t0) * 1e3
                 kv.publish(
                     RESULTS_CHANNEL,
@@ -323,13 +347,13 @@ class TaskExecutor:
                 self.ctx.metrics.record(
                     task=current, event="executed", read_ms=read_ms,
                     compute_ms=compute_ms, write_ms=write_ms,
-                    nbytes=sizeof(out), executor=self.executor_id,
+                    nbytes=out_nbytes, executor=self.executor_id,
                 )
                 return
 
             self.ctx.metrics.record(
                 task=current, event="executed", read_ms=read_ms,
-                compute_ms=compute_ms, write_ms=0.0, nbytes=sizeof(out),
+                compute_ms=compute_ms, write_ms=0.0, nbytes=out_nbytes,
                 executor=self.executor_id,
             )
 
@@ -344,7 +368,7 @@ class TaskExecutor:
                 # Intermediate outputs needed by the new executors go to the
                 # KV store; invoked executors receive the keys (paper §IV-C).
                 t0 = time.perf_counter()
-                kv.put_if_absent(current, out)
+                kv.put_if_absent(current, out, nbytes=out_nbytes)
                 write_ms = (time.perf_counter() - t0) * 1e3
                 seed: dict[str, Any] = {}
             else:

@@ -19,6 +19,7 @@ from __future__ import annotations
 import dataclasses
 import random
 import threading
+import zlib
 
 
 class SimulatedTaskFailure(RuntimeError):
@@ -43,7 +44,13 @@ class FaultInjector:
         self._lock = threading.Lock()
 
     def _rng(self, task_key: str, attempt: int) -> random.Random:
-        return random.Random((self.config.seed, task_key, attempt).__hash__())
+        # Stable across processes: tuple.__hash__ mixes in the
+        # PYTHONHASHSEED-randomized str hash, which silently turned every
+        # "verified recoverable" test seed into a per-process lottery
+        # (same bug class as hash()-based shard placement, fixed in
+        # kvstore the same way).
+        token = f"{self.config.seed}|{task_key}|{attempt}".encode()
+        return random.Random(zlib.crc32(token))
 
     def should_fail(self, task_key: str, attempt: int) -> bool:
         if self.config.task_failure_prob <= 0:

@@ -14,6 +14,25 @@ simulated and the *algorithms* are real:
 - ``colocate_shards=True`` puts all shards behind one transfer lane
   (the "all shards on the same VM" configuration of §V-B).
 
+Data-plane optimizations (beyond the paper, from its follow-ups):
+
+- **Striped large objects** (Wukong follow-up's chunked storage): values
+  larger than ``CostModel.stripe_threshold_bytes`` are split into up to
+  ``max_stripes`` stripes placed on *distinct* shards and transferred
+  over their lanes concurrently, so a large object pays the *max* of the
+  stripe lane times instead of the *sum* of one lane's serial transfer.
+  A manifest entry under the original key keeps ``get``/``exists``/
+  ``put_if_absent``/``delete`` and idempotent retries correct. The
+  stripes model the byte extents' placement and transfer cost; the
+  Python object itself rides the manifest (the costs are simulated, the
+  placement/laning/idempotence algorithms are real). With
+  ``colocate_shards=True`` every stripe shares one lane, so striping
+  degenerates to the serial transfer — exactly the §V-B NIC story.
+- **Batched round trips** (Lambada-style): ``mget`` groups keys by shard
+  and pays one ``kv_base_ms`` per shard batch instead of one per key;
+  ``register_counters`` registers a whole job's fan-in counters in one
+  round trip.
+
 Fan-in dependency counters (paper §IV-C) are atomic. Two modes:
 - ``paper``: plain atomic increment, exactly the paper's Redis INCR.
 - ``edge_set`` (default): the counter is a set of satisfied in-edge ids;
@@ -29,7 +48,8 @@ import pickle
 import queue
 import threading
 import time
-from typing import Any, Iterable
+import zlib
+from typing import Any, Iterable, Mapping
 
 
 def sizeof(value: Any) -> int:
@@ -77,6 +97,11 @@ class CostModel:
                                      # flood the strawman case")
     pubsub_msg_ms: float = 0.05      # Redis pub/sub message
     schedule_ship_mbps: float = 600.0  # static-schedule payload transfer
+    # Striping (Wukong follow-up's chunked large-object storage): values
+    # larger than stripe_threshold_bytes split into <= max_stripes stripes
+    # on distinct shards. <= 0 disables striping entirely.
+    stripe_threshold_bytes: int = 1 << 20
+    max_stripes: int = 8
     time_scale: float = 0.0
 
     def transfer_ms(self, nbytes: int) -> float:
@@ -108,9 +133,51 @@ class KVStats:
     bytes_written: int = 0
     incrs: int = 0
     publishes: int = 0
+    striped_puts: int = 0
+    striped_gets: int = 0
+    mget_batches: int = 0
 
     def snapshot(self) -> dict[str, int]:
         return dataclasses.asdict(self)
+
+
+class _Entry:
+    """A stored object plus its wire size, recorded once at put time so
+    reads never re-derive it (the recursive ``sizeof`` walk is a host-side
+    hot path on deep containers)."""
+
+    __slots__ = ("value", "nbytes")
+
+    def __init__(self, value: Any, nbytes: int):
+        self.value = value
+        self.nbytes = nbytes
+
+
+class _StripeManifest:
+    """Manifest for a striped object: the home-shard entry under the
+    original key. Records the stripe layout so every API (get / exists /
+    put_if_absent / delete / retries) resolves the object through one
+    stable key."""
+
+    __slots__ = ("value", "nbytes", "n_stripes")
+
+    def __init__(self, value: Any, nbytes: int, n_stripes: int):
+        self.value = value
+        self.nbytes = nbytes
+        self.n_stripes = n_stripes
+
+
+class _Stripe:
+    """One stripe's byte extent (placement + transfer-cost record)."""
+
+    __slots__ = ("nbytes",)
+
+    def __init__(self, nbytes: int):
+        self.nbytes = nbytes
+
+
+def _stripe_key(key: str, i: int) -> str:
+    return f"{key}/__stripe__/{i}"
 
 
 class _Shard:
@@ -150,8 +217,37 @@ class ShardedKVStore:
         self._stats_lock = threading.Lock()
 
     # -- placement ---------------------------------------------------------
+    def _shard_index(self, key: str) -> int:
+        # Stable across processes (unlike hash(), which PYTHONHASHSEED
+        # randomizes), so shard placement — and therefore lane contention
+        # and benchmark numbers — is reproducible run to run.
+        return zlib.crc32(key.encode("utf-8")) % len(self.shards)
+
     def _shard(self, key: str) -> _Shard:
-        return self.shards[hash(key) % len(self.shards)]
+        return self.shards[self._shard_index(key)]
+
+    def stripes_for(self, nbytes: int) -> int:
+        """Number of stripes a value of ``nbytes`` would be split into
+        (1 = stored whole)."""
+        thr = self.cost.stripe_threshold_bytes
+        if thr <= 0 or nbytes <= thr or len(self.shards) < 2:
+            return 1
+        return min(
+            self.cost.max_stripes,
+            len(self.shards),
+            -(-nbytes // thr),  # ceil div
+        )
+
+    def _stripe_layout(self, key: str, nbytes: int, n_stripes: int):
+        """(shard_index, stripe_key, stripe_bytes) per stripe; stripes go
+        on consecutive (distinct) shards starting at the home shard."""
+        base = self._shard_index(key)
+        n = len(self.shards)
+        per, rem = divmod(nbytes, n_stripes)
+        return [
+            ((base + i) % n, _stripe_key(key, i), per + (1 if i < rem else 0))
+            for i in range(n_stripes)
+        ]
 
     def _pay(self, shard: _Shard, nbytes: int) -> None:
         # Base latency is paid outside the lane; transfer holds the lane so
@@ -162,29 +258,120 @@ class ShardedKVStore:
             with shard.lane:
                 self.clock.charge(t_ms)
 
+    def _charge_striped_transfer(self, layout) -> None:
+        """Charge a striped transfer: stripes move over their lanes
+        concurrently, so the op is billed the slowest *lane's* total (one
+        stripe per lane when shards are distinct; the full serial sum when
+        ``colocate_shards`` folds every lane into one).
+
+        Only the home-shard lane is *held* for that duration: holding all
+        stripe lanes would let one striped op block every other (with 8
+        stripes over 10 shards, any two ops share a lane — a convoy that
+        erases the wall-clock win striping exists to provide). The home
+        lane still serializes same-object retries and same-shard
+        traffic; remote stripe lanes are modeled as load-spread, which is
+        exactly the follow-up paper's argument for chunking across
+        shards. Under ``colocate_shards`` every lane IS the home lane, so
+        the full serial occupancy is preserved."""
+        lane_ms: dict[int, float] = {}
+        for shard_idx, _, nbytes in layout:
+            lid = id(self.shards[shard_idx].lane)
+            lane_ms[lid] = lane_ms.get(lid, 0.0) + self.cost.transfer_ms(
+                nbytes)
+        wait_ms = max(lane_ms.values(), default=0.0)
+        if wait_ms <= 0:
+            return
+        with self.shards[layout[0][0]].lane:
+            self.clock.charge(wait_ms)
+
     # -- object store ------------------------------------------------------
-    def put(self, key: str, value: Any) -> None:
+    def _drop_stripes(self, key: str, n_stripes: int, first: int = 0) -> None:
+        """Remove stripe records ``first..n_stripes-1`` of ``key``."""
+        base = self._shard_index(key)
+        n = len(self.shards)
+        for i in range(first, n_stripes):
+            s = self.shards[(base + i) % n]
+            with s.lock:
+                s.data.pop(_stripe_key(key, i), None)
+
+    def _write_stripes(self, key: str, value: Any, nbytes: int,
+                       n_stripes: int, if_absent: bool) -> bool:
+        """Write stripes + manifest (manifest last: its insertion is the
+        linearization point, so readers never observe a torn object).
+        Returns False when ``if_absent`` and the manifest already existed
+        — concurrent retried writers produce byte-identical stripes, so
+        the loser's stripe writes are harmless no-ops. A plain overwrite
+        of a previously-striped value drops the old stripes its new
+        layout does not cover."""
+        layout = self._stripe_layout(key, nbytes, n_stripes)
+        self.clock.charge(self.cost.kv_base_ms)
+        self._charge_striped_transfer(layout)
+        for shard_idx, skey, snbytes in layout:
+            shard = self.shards[shard_idx]
+            with shard.lock:
+                if not if_absent or skey not in shard.data:
+                    shard.data[skey] = _Stripe(snbytes)
+        home = self._shard(key)
+        manifest = _StripeManifest(value, nbytes, n_stripes)
+        with home.lock:
+            if if_absent and key in home.data:
+                return False
+            old = home.data.get(key)
+            home.data[key] = manifest
+        if isinstance(old, _StripeManifest) and old.n_stripes > n_stripes:
+            self._drop_stripes(key, old.n_stripes, first=n_stripes)
+        return True
+
+    def put(self, key: str, value: Any, nbytes: int | None = None) -> None:
+        """Store ``value``. ``nbytes`` is an optional caller-known size
+        hint (skips the recursive ``sizeof`` walk)."""
+        if nbytes is None:
+            nbytes = sizeof(value)
+        n_stripes = self.stripes_for(nbytes)
+        if n_stripes > 1:
+            self._write_stripes(key, value, nbytes, n_stripes,
+                                if_absent=False)
+            with self._stats_lock:
+                self.stats.puts += 1
+                self.stats.striped_puts += 1
+                self.stats.bytes_written += nbytes
+            return
         shard = self._shard(key)
-        nbytes = sizeof(value)
         self._pay(shard, nbytes)
         with shard.lock:
-            shard.data[key] = value
+            old = shard.data.get(key)
+            shard.data[key] = _Entry(value, nbytes)
+        if isinstance(old, _StripeManifest):
+            # the overwritten value was striped: reclaim its stripes
+            self._drop_stripes(key, old.n_stripes)
         with self._stats_lock:
             self.stats.puts += 1
             self.stats.bytes_written += nbytes
 
-    def put_if_absent(self, key: str, value: Any) -> bool:
+    def put_if_absent(self, key: str, value: Any,
+                      nbytes: int | None = None) -> bool:
         """Idempotent write used by retried/speculative executors."""
         shard = self._shard(key)
         with shard.lock:
             if key in shard.data:
                 return False
-        nbytes = sizeof(value)
+        if nbytes is None:
+            nbytes = sizeof(value)
+        n_stripes = self.stripes_for(nbytes)
+        if n_stripes > 1:
+            if not self._write_stripes(key, value, nbytes, n_stripes,
+                                       if_absent=True):
+                return False
+            with self._stats_lock:
+                self.stats.puts += 1
+                self.stats.striped_puts += 1
+                self.stats.bytes_written += nbytes
+            return True
         self._pay(shard, nbytes)
         with shard.lock:
             if key in shard.data:
                 return False
-            shard.data[key] = value
+            shard.data[key] = _Entry(value, nbytes)
         with self._stats_lock:
             self.stats.puts += 1
             self.stats.bytes_written += nbytes
@@ -195,12 +382,22 @@ class ShardedKVStore:
         with shard.lock:
             if key not in shard.data:
                 raise KeyError(key)
-            value = shard.data[key]
-        self._pay(shard, sizeof(value))
+            entry = shard.data[key]
+        if isinstance(entry, _StripeManifest):
+            layout = self._stripe_layout(key, entry.nbytes, entry.n_stripes)
+            self.clock.charge(self.cost.kv_base_ms)
+            self._charge_striped_transfer(layout)
+            with self._stats_lock:
+                self.stats.gets += 1
+                self.stats.striped_gets += 1
+                self.stats.bytes_read += entry.nbytes
+            return entry.value
+        # Size was recorded once at put time; reads never re-derive it.
+        self._pay(shard, entry.nbytes)
         with self._stats_lock:
             self.stats.gets += 1
-            self.stats.bytes_read += sizeof(value)
-        return value
+            self.stats.bytes_read += entry.nbytes
+        return entry.value
 
     def exists(self, key: str) -> bool:
         shard = self._shard(key)
@@ -210,16 +407,34 @@ class ShardedKVStore:
     def delete(self, key: str) -> None:
         shard = self._shard(key)
         with shard.lock:
-            shard.data.pop(key, None)
+            entry = shard.data.pop(key, None)
+        if isinstance(entry, _StripeManifest):
+            self._drop_stripes(key, entry.n_stripes)
 
     # -- fan-in dependency counters (paper §IV-C) ---------------------------
     def register_counter(self, counter_id: str, width: int) -> None:
+        self.clock.charge(self.cost.kv_base_ms)
         with self._counter_lock:
-            self._counter_widths[counter_id] = width
-            if self.counter_mode == "edge_set":
-                self._counters.setdefault(counter_id, set())
-            else:
-                self._counters.setdefault(counter_id, 0)
+            self._register_locked(counter_id, width)
+
+    def register_counters(self, widths: Mapping[str, int]) -> None:
+        """Batched registration: the Storage Manager registers a whole
+        job's fan-in counters in ONE round trip at workflow start
+        (Lambada-style batching of many small storage requests). An empty
+        registration sends nothing and costs nothing."""
+        if not widths:
+            return
+        self.clock.charge(self.cost.kv_base_ms)
+        with self._counter_lock:
+            for counter_id, width in widths.items():
+                self._register_locked(counter_id, width)
+
+    def _register_locked(self, counter_id: str, width: int) -> None:
+        self._counter_widths[counter_id] = width
+        if self.counter_mode == "edge_set":
+            self._counters.setdefault(counter_id, set())
+        else:
+            self._counters.setdefault(counter_id, 0)
 
     def _record_edge_locked(self, counter_id: str, edge_id: str) -> int:
         """Record a satisfied in-edge; return the new count. Caller must
@@ -269,6 +484,8 @@ class ShardedKVStore:
         separate ``set`` round trip of the classic publish-then-increment
         protocol. The completing arrival skips the write entirely: its
         objects stay in executor memory and never touch the network.
+        Items above the striping threshold are persisted striped, same as
+        ``put``.
 
         ``expected`` lists keys the caller will need if it completes the
         fan-in; the keys among them absent from the store are reported
@@ -284,7 +501,11 @@ class ShardedKVStore:
         Returns ``(count, missing_expected_keys)``.
         """
         self.clock.charge(self.cost.kv_base_ms)  # one combined round trip
-        stored: dict[str, Any] = {}
+        # Sizes are derived BEFORE the counter lock: the recursive sizeof
+        # walk of every item must not serialize the whole job's fan-in
+        # protocol (every arrival in the job takes this lock).
+        sized = {key: sizeof(value) for key, value in items.items()}
+        stored: list[tuple[str, int, int]] = []  # key, nbytes, n_stripes
         missing: list[str] = []
         with self._counter_lock:
             width = self._counter_widths.get(counter_id)
@@ -294,11 +515,29 @@ class ShardedKVStore:
                 # Store before the increment becomes visible to the
                 # completing arrival (it reads these keys right after).
                 for key, value in items.items():
-                    shard = self._shard(key)
-                    with shard.lock:
-                        if key not in shard.data:
-                            shard.data[key] = value
-                            stored[key] = value
+                    home = self._shard(key)
+                    with home.lock:
+                        if key in home.data:
+                            continue
+                    nbytes = sized[key]
+                    n_stripes = self.stripes_for(nbytes)
+                    if n_stripes > 1:
+                        layout = self._stripe_layout(key, nbytes, n_stripes)
+                        for shard_idx, skey, snb in layout:
+                            s = self.shards[shard_idx]
+                            with s.lock:
+                                s.data.setdefault(skey, _Stripe(snb))
+                        with home.lock:
+                            if key in home.data:
+                                continue
+                            home.data[key] = _StripeManifest(
+                                value, nbytes, n_stripes)
+                    else:
+                        with home.lock:
+                            if key in home.data:
+                                continue
+                            home.data[key] = _Entry(value, nbytes)
+                    stored.append((key, nbytes, n_stripes))
             for key in expected:
                 shard = self._shard(key)
                 with shard.lock:
@@ -307,13 +546,17 @@ class ShardedKVStore:
         with self._stats_lock:
             self.stats.incrs += 1
             self.stats.puts += len(stored)
-            self.stats.bytes_written += sum(
-                sizeof(v) for v in stored.values()
-            )
+            self.stats.striped_puts += sum(
+                1 for _, _, n in stored if n > 1)
+            self.stats.bytes_written += sum(nb for _, nb, _ in stored)
         # Transfer time is charged outside the counter lock: the bytes are
         # already durable; only the simulated clock accounting remains.
-        for key, value in stored.items():
-            t_ms = self.cost.transfer_ms(sizeof(value))
+        for key, nbytes, n_stripes in stored:
+            if n_stripes > 1:
+                self._charge_striped_transfer(
+                    self._stripe_layout(key, nbytes, n_stripes))
+                continue
+            t_ms = self.cost.transfer_ms(nbytes)
             if t_ms > 0:
                 with self._shard(key).lane:
                     self.clock.charge(t_ms)
@@ -342,7 +585,51 @@ class ShardedKVStore:
 
     # -- bulk --------------------------------------------------------------
     def mget(self, keys: Iterable[str]) -> list[Any]:
-        return [self.get(k) for k in keys]
+        """Pipelined multi-get: keys are grouped by shard and each shard
+        batch pays ONE ``kv_base_ms`` round trip (Lambada-style batching
+        of small requests); transfer time is still charged per lane.
+        Returns values in input order."""
+        keys = list(keys)
+        by_shard: dict[int, list[str]] = {}
+        queued: set[str] = set()
+        for k in keys:
+            if k not in queued:
+                queued.add(k)
+                by_shard.setdefault(self._shard_index(k), []).append(k)
+        entries: dict[str, Any] = {}
+        striped: list[tuple[str, Any]] = []
+        total_bytes = 0
+        n_striped = 0
+        for idx in sorted(by_shard):
+            shard = self.shards[idx]
+            self.clock.charge(self.cost.kv_base_ms)  # one RT per shard batch
+            with shard.lock:
+                for k in by_shard[idx]:
+                    if k not in shard.data:
+                        raise KeyError(k)
+                    entries[k] = shard.data[k]
+            batch_bytes = 0
+            for k in by_shard[idx]:
+                e = entries[k]
+                if isinstance(e, _StripeManifest):
+                    striped.append((k, e))
+                    n_striped += 1
+                else:
+                    batch_bytes += e.nbytes
+                total_bytes += e.nbytes
+            t_ms = self.cost.transfer_ms(batch_bytes)
+            if t_ms > 0:
+                with shard.lane:
+                    self.clock.charge(t_ms)
+        for k, manifest in striped:
+            self._charge_striped_transfer(
+                self._stripe_layout(k, manifest.nbytes, manifest.n_stripes))
+        with self._stats_lock:
+            self.stats.gets += len(queued)
+            self.stats.striped_gets += n_striped
+            self.stats.mget_batches += len(by_shard)
+            self.stats.bytes_read += total_bytes
+        return [entries[k].value for k in keys]
 
     def reset_stats(self) -> None:
         with self._stats_lock:

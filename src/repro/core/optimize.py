@@ -281,12 +281,16 @@ def compile_dag(dag: DAG, config: OptimizeConfig | None = None) -> CompiledDAG:
     if cfg.fuse_chains:
         before = len(working)
         task_list, fused = fuse_linear_chains(working, cfg.max_fusion_len)
-        working = DAG(task_list)
+        if fused:
+            working = DAG(task_list)
+            tasks = working.tasks.values()
+        # else: no fusible chains — skip rebuilding (and re-validating)
+        # the whole graph; host-side schedule generation is a measured
+        # hot path on wide fusion-free DAGs like tree reductions.
         stats.append(PassStats(
             name="fuse_chains", before_tasks=before, after_tasks=len(working),
             detail=f"{len(fused)} chains fused",
         ))
-        tasks = working.tasks.values()
 
     clusters: dict[str, str] = {}
     delayed: frozenset[str] = frozenset()

@@ -135,9 +135,13 @@ def test_executor_count_matches_paper_fig6():
 
 class TestFaultTolerance:
     def test_retries_recover(self):
+        """seed=21 is a verified recoverable injection under the
+        process-stable fault hash (failures at attempts 0/1 on disjoint
+        keys, none at the final attempt), so completion is guaranteed
+        regardless of executor arrival order."""
         dag = tree_dag(32)
         cfg = EngineConfig(faults=FaultConfig(
-            task_failure_prob=0.04, max_retries=2, seed=11))
+            task_failure_prob=0.04, max_retries=2, seed=21))
         rep = WukongEngine(cfg).compute(dag)
         assert rep.results == seq_eval(dag)
 
@@ -176,15 +180,15 @@ class TestFaultTolerance:
         """Retries must not double-fire fan-ins. With the paper's plain
         INCR counters they CAN (the documented hazard, why a retry run
         cannot be asserted in that mode); edge_set counters close the
-        hole, so the job must complete correctly. seed=7 is a verified
-        recoverable injection (failures at attempt 0 but none at the
-        final attempt), so completion is guaranteed regardless of
-        executor arrival order."""
+        hole, so the job must complete correctly. seed=6 is a verified
+        recoverable injection under the process-stable fault hash
+        (failures at attempt 0 but none at later attempts), so completion
+        is guaranteed regardless of executor arrival order."""
         dag = tree_dag(8)
         cfg = EngineConfig(
             counter_mode="edge_set",
             faults=FaultConfig(task_failure_prob=0.1, max_retries=2,
-                               seed=7))
+                               seed=6))
         rep = WukongEngine(cfg).compute(dag)
         assert rep.results == seq_eval(dag)
 
