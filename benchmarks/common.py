@@ -2,9 +2,16 @@
 
 All paper-figure benchmarks run the *real* engines on *real* DAGs with
 jitted JAX payloads; only the FaaS substrate costs (invocation latency,
-KV transfer, TCP handling) are simulated, scaled by ``SIM_SCALE`` so a
-512-leaf workload finishes in seconds on one core. Within one figure all
-engines share the same scale, so the paper's *relative* claims are the
+KV transfer, TCP handling, per-task compute duration) are simulated.
+
+By default (``SIM_SCALE == 0``) everything runs on the deterministic
+virtual discrete-event clock (repro.core.simclock): simulated seconds
+cost zero wall time, results and charged ms are bit-identical across
+runs, and ``wall_s`` in every row is the simulated makespan. Setting
+``REPRO_SIM_SCALE > 0`` switches to the seed real-time mode (simulated
+latencies really sleep, scaled by SIM_SCALE) — only needed for sanity
+cross-checks of the virtual substrate. Within one figure all engines
+share the same clock mode, so the paper's *relative* claims are the
 reproduction targets (absolute AWS seconds are not reproducible in this
 container — DESIGN.md §1).
 """
@@ -26,7 +33,7 @@ from repro.core import (
     WukongEngine,
 )
 
-SIM_SCALE = float(os.environ.get("REPRO_SIM_SCALE", "0.1"))
+SIM_SCALE = float(os.environ.get("REPRO_SIM_SCALE", "0"))
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
 
 
@@ -34,24 +41,21 @@ def cost(scale: float = SIM_SCALE, **kw: Any) -> CostModel:
     return CostModel(time_scale=scale, **kw)
 
 
-def sleep_s(delay_ms: float) -> float:
-    """Scale a paper task-duration knob into real seconds."""
-    return delay_ms * SIM_SCALE / 1e3
-
-
 # Effective per-core throughput of the simulated cluster. Task compute
-# duration = analytic_flops / GFLOPS_SIM, scaled like every other
-# simulated latency. This is how the paper's compute-heavy regime (where
-# Lambda's elastic core count beats a 25-core cluster) is emulated on a
-# single-core container.
+# duration = analytic_flops / GFLOPS_SIM simulated ms, charged on the
+# engine clock like every other simulated latency. This is how the
+# paper's compute-heavy regime (where Lambda's elastic core count beats
+# a 25-core cluster) is emulated on a single-core container.
 GFLOPS_SIM = float(os.environ.get("REPRO_GFLOPS_SIM", "0.02")) * 1e9
 # default calibrated so a 128^3 block product ~ 210 ms simulated (the
 # paper's sub-second task regime) and simulated compute >> the real
 # single-core jnp time of the small blocks
 
 
-def sleep_per_flop() -> float:
-    return SIM_SCALE / GFLOPS_SIM
+def ms_per_flop() -> float:
+    """Simulated ms charged per analytic flop (clock-mode agnostic: the
+    realtime clock sleeps it scaled, the virtual clock just advances)."""
+    return 1e3 / GFLOPS_SIM
 
 
 def wukong(scale: float = SIM_SCALE, **kw: Any) -> WukongEngine:
@@ -132,11 +136,15 @@ def serverful_laptop(scale: float = SIM_SCALE) -> ServerfulEngine:
 
 
 def timed(engine, dag, repeats: int = 1,
-          warmup: bool = True) -> dict[str, Any]:
+          warmup: "bool | None" = None) -> dict[str, Any]:
     """Run and report simulated-environment wall seconds (mean over
     repeats) plus engine counters. ``warmup`` runs the DAG once first so
     one-time XLA compilation of the task payloads is not charged to
-    whichever engine happens to run first."""
+    whichever engine happens to run first; it defaults to on only in
+    real-time mode — under the virtual clock ``wall_s`` is simulated
+    makespan, which host-side compilation cannot perturb."""
+    if warmup is None:
+        warmup = SIM_SCALE > 0
     walls = []
     rep = None
     if warmup:

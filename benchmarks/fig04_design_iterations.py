@@ -25,7 +25,7 @@ def run(n: int = 512, delays_ms=(0.0, 50.0, 100.0)) -> list[dict]:
     ]
     for delay in delays_ms:
         for label, eng in engines:
-            dag = tree_reduction_dag(n, sleep_s=common.sleep_s(delay),
+            dag = tree_reduction_dag(n, compute_ms=delay,
                                      payload_bytes=1 << 20)
             r = common.timed(eng, dag)
             r["label"] = f"{label}@{delay:g}ms"

@@ -28,7 +28,7 @@ def run(sizes=((512, 128), (1024, 128), (2048, 128))) -> list[dict]:
             ("dask_ec2", common.serverful_ec2()),
             ("dask_laptop", common.serverful_laptop()),
         ]:
-            dag = gemm_dag(n, bs, sleep_per_flop=common.sleep_per_flop())
+            dag = gemm_dag(n, bs, ms_per_flop=common.ms_per_flop())
             r = common.timed(eng, dag)
             r["label"] = f"{label}@n={n}"
             r["derived"] = f"blocks={(n // bs) ** 2}"

@@ -25,7 +25,7 @@ def run(row_sizes=(4096, 8192, 16384), cols: int = 64,
             ("dask_ec2", common.serverful_ec2()),
             ("dask_laptop", common.serverful_laptop()),
         ]:
-            dag = tsqr_svd_dag(nrows, cols, n_blocks, sleep_per_flop=common.sleep_per_flop())
+            dag = tsqr_svd_dag(nrows, cols, n_blocks, ms_per_flop=common.ms_per_flop())
             r = common.timed(eng, dag)
             r["label"] = f"{label}@rows={nrows}"
             r["derived"] = f"cols={cols}"

@@ -29,7 +29,7 @@ def run(sizes=(512, 1024, 2048, 4096), n_blocks: int = 8) -> list[dict]:
             ("dask_laptop", common.serverful_laptop(), {}),
         ]:
             dag = randomized_svd_dag(n, 5, 5, n_blocks,
-                         sleep_per_flop=common.sleep_per_flop(),
+                         ms_per_flop=common.ms_per_flop(),
                          **kw)
             r = common.timed(eng, dag)
             r["label"] = f"{label}@n={n}"

@@ -18,7 +18,7 @@ def run(sample_sizes=(8192, 32768, 131072), n_blocks: int = 16,
             ("dask_ec2", common.serverful_ec2()),
             ("dask_laptop", common.serverful_laptop()),
         ]:
-            dag = svc_dag(n, n_blocks, n_iters, sleep_per_flop=common.sleep_per_flop())
+            dag = svc_dag(n, n_blocks, n_iters, ms_per_flop=common.ms_per_flop())
             r = common.timed(eng, dag)
             r["label"] = f"{label}@n={n}"
             r["derived"] = f"iters={n_iters}"

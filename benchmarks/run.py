@@ -3,12 +3,17 @@
 Prints ``name,us_per_call,derived`` CSV rows and writes a
 ``BENCH_results.json`` snapshot (engine -> wall_s / charged_ms /
 kv_stats per figure) at the repo root so the perf trajectory is tracked
-across PRs. Scale-down knobs: ``REPRO_SIM_SCALE`` (simulated-latency
-multiplier), ``--quick`` (smaller problem sizes), and ``--smoke`` (toy
-sizes + near-zero simulated latency; a CI regression gate that executes
-every figure's engines end-to-end in seconds, checking they complete
-rather than how fast they run — plus a data-plane gate asserting the
-optimized WUKONG config is not charged more than the unoptimized one).
+across PRs.
+
+Benchmarks run on the deterministic virtual clock by default
+(``SIM_SCALE == 0``): ``wall_s`` is the simulated makespan,
+bit-identical across runs. Setting ``REPRO_SIM_SCALE > 0`` re-enables
+the seed real-time mode (simulated latencies really sleep) for
+cross-checks. Problem-size knobs: ``--quick`` (smaller sizes) and
+``--smoke`` (toy sizes; a CI regression gate that executes every
+figure's engines end-to-end in seconds, plus a data-plane gate and a
+virtual-clock gate asserting determinism and the >=10x wall-time
+speedup over the seed SIM_SCALE=0.1 real-time path).
 """
 from __future__ import annotations
 
@@ -75,6 +80,68 @@ def _time_schedule_generation() -> dict:
     return out
 
 
+def _virtual_mode_trajectory(smoke: bool) -> dict:
+    """The PR 3 acceptance record: fig07's 512-leaf tree reduction under
+    the virtual clock — two seeded runs must produce identical results /
+    charged_ms / simulated makespan, and the virtual run must beat the
+    seed ``SIM_SCALE=0.1`` real-time path by >= 10x wall time. Recorded
+    in BENCH_results.json; asserted under ``--smoke``."""
+    import time as _t
+
+    from repro.apps import tree_reduction_dag
+    from repro.core import CostModel, EngineConfig, WukongEngine
+
+    # 512 leaves, 12 s tasks along a 10-level critical path, 1 MB edge
+    # payloads (the fig07 shape): ~120 s of simulated time. The virtual
+    # run's wall time is flat in task duration (same event count), the
+    # real-time run's scales with it — exactly the decoupling the
+    # virtual clock exists to provide.
+    dag = tree_reduction_dag(1024, compute_ms=12000.0,
+                             payload_bytes=1 << 20)
+
+    def run_once(time_scale: float):
+        eng = WukongEngine(EngineConfig(cost=CostModel(
+            time_scale=time_scale)))
+        t0 = _t.perf_counter()
+        rep = eng.compute(dag)
+        elapsed = _t.perf_counter() - t0
+        (_, root), = rep.results.items()
+        return {"elapsed_s": elapsed, "sim_wall_s": rep.wall_s,
+                "charged_ms": rep.charged_ms, "root": float(root[0])}
+
+    v1 = run_once(0.0)
+    v2 = run_once(0.0)
+    rt = run_once(0.1)  # the seed real-time path (SIM_SCALE=0.1)
+    deterministic = (v1["charged_ms"] == v2["charged_ms"]
+                     and v1["sim_wall_s"] == v2["sim_wall_s"]
+                     and v1["root"] == v2["root"])
+    speedup = rt["elapsed_s"] / min(v1["elapsed_s"], v2["elapsed_s"])
+    out = {
+        "workload": "fig07 512-leaf TR, 12000ms tasks, 1MB payloads",
+        "virtual_wall_s": min(v1["elapsed_s"], v2["elapsed_s"]),
+        "virtual_sim_makespan_s": v1["sim_wall_s"],
+        "virtual_charged_ms": v1["charged_ms"],
+        "realtime_wall_s": rt["elapsed_s"],
+        "speedup_vs_realtime": speedup,
+        "deterministic": deterministic,
+    }
+    print(f"# virtual clock (512-leaf TR): sim makespan "
+          f"{v1['sim_wall_s']:.1f}s in {out['virtual_wall_s']:.2f}s wall; "
+          f"seed real-time path {rt['elapsed_s']:.2f}s wall -> "
+          f"{speedup:.1f}x; deterministic={deterministic}",
+          file=sys.stderr)
+    if smoke:
+        if not deterministic:
+            raise SystemExit(
+                "virtual-clock regression: two identical runs diverged "
+                f"({v1} vs {v2})")
+        if speedup < 10.0:
+            raise SystemExit(
+                f"virtual-clock regression: only {speedup:.1f}x over the "
+                "seed real-time path (>= 10x required)")
+    return out
+
+
 def _check_dataplane_gate(rows_by_fig: dict) -> None:
     """CI regression gate: on the smoke workload the optimized data
     plane (striping + batched round trips) must not be charged more
@@ -106,11 +173,6 @@ def main() -> None:
                          "engine-regression gate for CI")
     ap.add_argument("--only", default=None, help="comma list, e.g. fig07")
     args = ap.parse_args()
-
-    if args.smoke:
-        # Must be set before benchmarks.common is imported (it reads the
-        # env at import time).
-        os.environ.setdefault("REPRO_SIM_SCALE", "0.001")
 
     from benchmarks import (
         fig04_design_iterations,
@@ -173,12 +235,17 @@ def main() -> None:
     snapshot = {
         "mode": ("smoke" if args.smoke else "quick" if args.quick else "full"),
         "sim_scale": common.SIM_SCALE,
+        "clock": "virtual" if common.SIM_SCALE == 0 else "realtime",
         "schedule_generation": _time_schedule_generation(),
         "figures": {
             name: {r["label"]: _json_row(r) for r in rows}
             for name, rows in rows_by_fig.items()
         },
     }
+    if only is None:
+        # The trajectory's real-time leg costs ~12 s of genuine sleeping;
+        # skip it when a dev is iterating on a single figure via --only.
+        snapshot["virtual_mode"] = _virtual_mode_trajectory(smoke=args.smoke)
     path = os.path.normpath(RESULTS_JSON)
     with open(path, "w") as f:
         json.dump(snapshot, f, indent=1, sort_keys=True)

@@ -55,6 +55,7 @@ def svc_dag(
     reg: float = 1e-3,
     seed: int = 5,
     sleep_per_flop: float = 0.0,
+    ms_per_flop: float = 0.0,
 ) -> DAG:
     if n_samples % n_blocks:
         raise ValueError("n_samples must divide into n_blocks")
@@ -62,16 +63,9 @@ def svc_dag(
     grad_flops = 4.0 * rows * DIM
 
     def costed(fn):
-        if sleep_per_flop <= 0:
-            return fn
-        import time as _time
+        from repro.apps.costing import flop_costed
 
-        def wrapped(*a, **kw):
-            _time.sleep(grad_flops * sleep_per_flop)
-            return fn(*a, **kw)
-
-        wrapped.__name__ = getattr(fn, "__name__", "task")
-        return wrapped
+        return flop_costed(fn, grad_flops, sleep_per_flop, ms_per_flop)
 
     g = GraphBuilder()
 

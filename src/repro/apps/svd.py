@@ -50,17 +50,12 @@ def _singular_values(r: jax.Array) -> jax.Array:
     return jnp.linalg.svd(r, compute_uv=False)
 
 
-def _costed(fn, flops, sleep_per_flop):
-    if sleep_per_flop <= 0:
-        return fn
-    import time as _time
+def _costed(fn, flops, sleep_per_flop, ms_per_flop=0.0):
+    """Per-task compute cost from analytic FLOPs (see
+    repro.apps.costing.flop_costed)."""
+    from repro.apps.costing import flop_costed
 
-    def wrapped(*a, **kw):
-        _time.sleep(flops * sleep_per_flop)
-        return fn(*a, **kw)
-
-    wrapped.__name__ = getattr(fn, "__name__", "task")
-    return wrapped
+    return flop_costed(fn, flops, sleep_per_flop, ms_per_flop)
 
 
 def tsqr_svd_dag(
@@ -70,10 +65,12 @@ def tsqr_svd_dag(
     seed: int = 3,
     compute_u: bool = True,
     sleep_per_flop: float = 0.0,
+    ms_per_flop: float = 0.0,
 ) -> DAG:
     """SVD1: tall-and-skinny (rows >> cols) SVD via TSQR.
 
-    ``sleep_per_flop`` simulates compute duration per task from analytic
+    ``ms_per_flop`` (simulated, clock-charged) / ``sleep_per_flop``
+    (legacy real sleep) simulate compute duration per task from analytic
     FLOPs (single-core container; same methodology as TR's delays)."""
     if rows % n_blocks:
         raise ValueError("rows must divide evenly into n_blocks")
@@ -89,7 +86,7 @@ def tsqr_svd_dag(
         return make
 
     blocks = [g.add(leaf(i), name=f"svd1-A-{i}") for i in range(n_blocks)]
-    rs = [g.add(_costed(_qr_r, qr_flops, sleep_per_flop), blk,
+    rs = [g.add(_costed(_qr_r, qr_flops, sleep_per_flop, ms_per_flop), blk,
                 name=f"svd1-R0-{i}")
           for i, blk in enumerate(blocks)]
     depth = 0
@@ -113,7 +110,7 @@ def tsqr_svd_dag(
 
         for i, blk in enumerate(blocks):
             g.add(_costed(u_block, 2.0 * block_rows * cols ** 2,
-                          sleep_per_flop),
+                          sleep_per_flop, ms_per_flop),
                   blk, final_r, name=f"svd1-U-{i}")
     return g.build()
 
@@ -135,6 +132,7 @@ def randomized_svd_dag(
     seed: int = 4,
     ideal_storage: bool = False,
     sleep_per_flop: float = 0.0,
+    ms_per_flop: float = 0.0,
 ) -> DAG:
     """SVD2: rank-``rank`` randomized SVD of an n x n matrix [Halko et al.].
 
@@ -151,7 +149,7 @@ def randomized_svd_dag(
     g = GraphBuilder()
 
     def costed(fn, flops=blk_mm_flops):
-        return _costed(fn, flops, sleep_per_flop)
+        return _costed(fn, flops, sleep_per_flop, ms_per_flop)
 
     @functools.partial(jax.jit, static_argnums=(0, 1))
     def omega(seed2: int, nn: int) -> jax.Array:

@@ -2,9 +2,12 @@
 
 TR sums the elements of an array by repeatedly adding adjacent elements
 until one remains. An initial array of n numbers yields n/2 leaf tasks at
-the bottom of the DAG (paper Fig. 4 caption). A sleep-based delay per task
-simulates a compute task with controllable duration — exactly the paper's
-methodology for sweeping task granularity.
+the bottom of the DAG (paper Fig. 4 caption). A per-task delay simulates
+a compute task with controllable duration — exactly the paper's
+methodology for sweeping task granularity. ``compute_ms`` declares the
+delay in *simulated* ms charged on the engine clock (free wall-clock
+under the virtual clock, scaled real sleep in real-time mode);
+``sleep_s`` is the seed's real-sleep knob, kept for cross-checks.
 """
 from __future__ import annotations
 
@@ -14,6 +17,7 @@ import numpy as np
 
 from repro.core.api import GraphBuilder
 from repro.core.dag import DAG
+from repro.core.simclock import simulated_compute
 
 
 def tree_reduction_dag(
@@ -21,10 +25,15 @@ def tree_reduction_dag(
     sleep_s: float = 0.0,
     chunk: np.ndarray | None = None,
     payload_bytes: int = 0,
+    compute_ms: float = 0.0,
 ) -> DAG:
     """Build the TR DAG for an array of ``n`` numbers (n/2 leaf tasks).
 
-    ``sleep_s``       — per-task simulated compute duration (paper's knob).
+    ``compute_ms``    — per-task simulated compute duration in ms, charged
+                        on the engine clock (the paper's task-granularity
+                        knob).
+    ``sleep_s``       — per-task REAL sleep seconds (legacy real-time
+                        knob; prefer ``compute_ms``).
     ``payload_bytes`` — optional ballast carried through every edge so the
                         communication-bound regime (paper: "dominated by
                         the communication overhead of transferring the
@@ -35,10 +44,15 @@ def tree_reduction_dag(
     values = chunk if chunk is not None else np.arange(n, dtype=np.float64)
     ballast = max(0, payload_bytes) // 8
 
+    def charge() -> None:
+        if compute_ms > 0:
+            simulated_compute(compute_ms)
+        if sleep_s > 0:
+            time.sleep(sleep_s)
+
     def make_add(a: float, b: float):
         def leaf_add() -> np.ndarray:
-            if sleep_s > 0:
-                time.sleep(sleep_s)
+            charge()
             out = np.empty(1 + ballast)
             out[0] = a + b
             return out
@@ -47,8 +61,7 @@ def tree_reduction_dag(
         return leaf_add
 
     def combine(x: np.ndarray, y: np.ndarray) -> np.ndarray:
-        if sleep_s > 0:
-            time.sleep(sleep_s)
+        charge()
         out = np.empty_like(x)
         out[0] = x[0] + y[0]
         return out

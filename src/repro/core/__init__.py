@@ -25,6 +25,12 @@ from repro.core.optimize import (
     compile_dag,
 )
 from repro.core.schedule import StaticSchedule, generate_static_schedules
+from repro.core.simclock import (
+    RealtimeClock,
+    VirtualClock,
+    clock_for_scale,
+    simulated_compute,
+)
 
 __all__ = [
     "DAG", "Task", "TaskRef", "GraphBuilder", "delayed_graph",
@@ -35,4 +41,5 @@ __all__ = [
     "StaticSchedule", "generate_static_schedules",
     "OptimizeConfig", "CompiledDAG", "PassStats", "compile_dag",
     "ALL_PASSES", "NO_PASSES",
+    "VirtualClock", "RealtimeClock", "clock_for_scale", "simulated_compute",
 ]

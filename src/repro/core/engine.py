@@ -19,14 +19,20 @@ Engines (paper §III's "journey from the serverful to the serverless"):
 All engines consume the same ``DAG`` (the paper could only compare against
 Dask because both shared a representation — §V-D; we keep that property
 for every baseline) and the same simulated FaaS cost model.
+
+Time never comes from ``time.*`` here: every wait, deadline, and
+timestamp goes through the engine clock (repro.core.simclock). Under the
+default virtual clock (``CostModel.time_scale == 0``) idle waiting costs
+zero wall time, ``job_timeout_s`` means *simulated* seconds, and
+``JobReport.wall_s`` is the deterministic simulated makespan; with
+``time_scale > 0`` the seed real-time behavior is preserved for
+cross-checks.
 """
 from __future__ import annotations
 
 import dataclasses
 import queue
 import threading
-import time
-from concurrent.futures import ThreadPoolExecutor
 from typing import Any
 
 from repro.core.dag import DAG, TaskRef
@@ -41,6 +47,7 @@ from repro.core.invoker import FanoutProxy, InvokerPool
 from repro.core.kvstore import CostModel, ShardedKVStore, sizeof
 from repro.core.optimize import OptimizeConfig, PassStats, ensure_compiled
 from repro.core.schedule import generate_static_schedules
+from repro.core.simclock import task_clock
 
 
 class JobError(RuntimeError):
@@ -65,9 +72,13 @@ class EngineConfig:
     # factor, is configured on the CostModel (stripe_threshold_bytes /
     # max_stripes) since it is a property of the storage substrate.
     batch_kv_round_trips: bool = True
-    max_concurrency: int = 512             # simulated Lambda concurrency
-    speculative_poll_s: float = 0.01
-    job_timeout_s: float = 600.0
+    # Simulated Lambda concurrency (runtime-pool cap). Workers are
+    # created lazily in both clock modes, so the cap can be raised to
+    # AWS-scale (the virtual clock sweeps 8k-64k-task DAGs without the
+    # wall-clock cost that used to bind this to 512).
+    max_concurrency: int = 4096
+    speculative_poll_s: float = 0.01       # simulated s under VirtualClock
+    job_timeout_s: float = 600.0           # simulated s under VirtualClock
     # DAG compiler pipeline run before scheduling (repro.core.optimize);
     # None = run the graph verbatim (the seed behavior). Each pass is
     # independently switchable for §V-B-style factor ablations.
@@ -77,7 +88,7 @@ class EngineConfig:
 @dataclasses.dataclass
 class JobReport:
     results: dict[str, Any]
-    wall_s: float
+    wall_s: float  # simulated makespan (virtual) / real elapsed (realtime)
     tasks: int
     executors_invoked: int
     kv_stats: dict[str, int]
@@ -88,7 +99,12 @@ class JobReport:
 
 class _ResultWaiter:
     """Collects root results from the results channel, dedupes duplicates
-    (speculative executors may publish a root twice)."""
+    (speculative executors may publish a root twice).
+
+    Event-driven on the engine clock: the waiter blocks on its
+    subscription until a message or the job deadline — no polling, so
+    idle waiting costs zero wall time under the virtual clock and
+    ``timeout_s`` means clock (simulated) seconds."""
 
     def __init__(self, kv: ShardedKVStore, roots: tuple[str, ...]):
         self.kv = kv
@@ -96,16 +112,17 @@ class _ResultWaiter:
         self.sub = kv.subscribe(RESULTS_CHANNEL)
 
     def wait(self, timeout_s: float) -> dict[str, Any]:
+        clock = self.kv.clock
         done: set[str] = set()
-        deadline = time.monotonic() + timeout_s
+        deadline = clock.now_ms() + timeout_s * 1e3
         while done != self.roots:
-            remaining = deadline - time.monotonic()
-            if remaining <= 0:
+            remaining_ms = deadline - clock.now_ms()
+            if remaining_ms <= 0:
                 raise JobError(
                     f"job timed out; missing roots: {sorted(self.roots - done)}"
                 )
             try:
-                msg = self.sub.get(timeout=min(remaining, 0.25))
+                msg = self.sub.get(timeout=remaining_ms / 1e3)
             except queue.Empty:
                 continue
             if msg["type"] == "error":
@@ -124,6 +141,8 @@ class WukongEngine:
     def compute(self, dag: DAG) -> JobReport:
         cfg = self.config
         # DAG compiler: rewrite/annotate before any schedule is generated.
+        # Host-side work (compilation, schedule generation) happens before
+        # the clock starts: it is scheduler prep, not simulated time.
         dag = ensure_compiled(dag, cfg.optimize)
         kv = ShardedKVStore(
             n_shards=cfg.n_kv_shards,
@@ -131,94 +150,105 @@ class WukongEngine:
             colocate_shards=cfg.colocate_kv_shards,
             counter_mode=cfg.counter_mode,
         )
+        clock = kv.clock
         schedule_set = generate_static_schedules(dag)
-        # Storage Manager registers the fan-in counters at workflow start
-        # — in ONE batched round trip (Lambada-style request batching),
-        # or one per counter when the batching factor is ablated off.
-        counters = schedule_set.fan_in_counters()
-        if cfg.batch_kv_round_trips:
-            kv.register_counters(counters)
-        else:
-            for cid, width in counters.items():
-                kv.register_counter(cid, width)
-
-        metrics = TaskMetrics()
-        heartbeats = HeartbeatRegistry()
-        faults = FaultInjector(cfg.faults)
-        pool = ThreadPoolExecutor(max_workers=cfg.max_concurrency)
-        initial_invokers = InvokerPool(
-            cfg.num_initial_invokers, cfg.cost, kv.clock, pool, name="init"
-        )
-        proxy_invokers = InvokerPool(
-            cfg.num_proxy_invokers, cfg.cost, kv.clock, pool, name="proxy"
-        )
-        proxy = FanoutProxy(kv, proxy_invokers) if cfg.use_proxy else None
-
-        ctx: ExecutorContext | None = None
-
-        def spawn(start_key, seed_cache, schedule, width, attempt=0,
-                  parent=None):
-            assert ctx is not None
-            ship_ms = schedule.code_size_bytes / (
-                cfg.cost.schedule_ship_mbps * 1e6
-            ) * 1e3
-            body = _executor_body(ctx, schedule, start_key, seed_cache,
-                                  attempt, parent)
-            if proxy is not None and width >= cfg.proxy_threshold:
-                # Large fan-out: one pub/sub message offloads all the
-                # invocations to the proxy's parallel invoker pool.
-                kv.publish(FanoutProxy.CHANNEL, {"spawns": [body]})
+        # The scheduler (this thread) is the first clock actor; every
+        # other actor (invoker lanes, runtime workers, proxy, monitor) is
+        # spawned through the clock so virtual time can only advance when
+        # all of them are quiescent.
+        with clock.actor():
+            # Storage Manager registers the fan-in counters at workflow
+            # start — in ONE batched round trip (Lambada-style request
+            # batching), or one per counter when the factor is ablated.
+            counters = schedule_set.fan_in_counters()
+            if cfg.batch_kv_round_trips:
+                kv.register_counters(counters)
             else:
-                initial_invokers.submit(body, extra_ms=ship_ms)
+                for cid, width in counters.items():
+                    kv.register_counter(cid, width)
 
-        ctx = ExecutorContext(
-            dag=dag,
-            kv=kv,
-            spawn=spawn,
-            faults=faults,
-            heartbeats=heartbeats,
-            metrics=metrics,
-            inline_fanout_args=cfg.inline_fanout_args,
-            coalesce_batch=getattr(dag, "coalesce_batch", 0),
-            batch_kv_round_trips=cfg.batch_kv_round_trips,
-        )
+            metrics = TaskMetrics(clock)
+            heartbeats = HeartbeatRegistry()
+            faults = FaultInjector(cfg.faults)
+            pool = clock.pool(cfg.max_concurrency)
+            initial_invokers = InvokerPool(
+                cfg.num_initial_invokers, cfg.cost, clock, pool, name="init"
+            )
+            proxy_invokers = InvokerPool(
+                cfg.num_proxy_invokers, cfg.cost, clock, pool, name="proxy"
+            )
+            proxy = FanoutProxy(kv, proxy_invokers) if cfg.use_proxy else None
 
-        waiter = _ResultWaiter(kv, dag.roots)
-        t0 = time.perf_counter()
-        # Initial Task Executor Invokers: one executor per start batch —
-        # one batch per static schedule (paper §IV-C), or fewer when the
-        # coalescing pass grouped sibling leaves.
-        for keys, sched in schedule_set.batches:
-            spawn(keys, {}, sched, width=1)
+            ctx: ExecutorContext | None = None
 
-        stop_monitor = threading.Event()
-        monitor = threading.Thread(
-            target=_speculative_monitor,
-            args=(ctx, stop_monitor, cfg, schedule_set),
-            daemon=True,
-        )
-        monitor.start()
-        try:
-            results = waiter.wait(cfg.job_timeout_s)
-        finally:
-            stop_monitor.set()
-            initial_invokers.close()
-            proxy_invokers.close()
-            if proxy is not None:
-                proxy.close()
-            pool.shutdown(wait=False, cancel_futures=True)
-        wall = time.perf_counter() - t0
-        return JobReport(
-            results=results,
-            wall_s=wall,
-            tasks=len(dag),
-            executors_invoked=initial_invokers.invocations
-            + proxy_invokers.invocations,
-            kv_stats=kv.stats.snapshot(),
-            metrics=metrics.records,
-            charged_ms=kv.clock.charged_ms,
-            optimizer=getattr(dag, "pass_stats", ()),
-        )
+            def spawn(start_key, seed_cache, schedule, width, attempt=0,
+                      parent=None):
+                assert ctx is not None
+                ship_ms = schedule.code_size_bytes / (
+                    cfg.cost.schedule_ship_mbps * 1e6
+                ) * 1e3
+                body = _executor_body(ctx, schedule, start_key, seed_cache,
+                                      attempt, parent)
+                if proxy is not None and width >= cfg.proxy_threshold:
+                    # Large fan-out: one pub/sub message offloads all the
+                    # invocations to the proxy's parallel invoker pool.
+                    kv.publish(FanoutProxy.CHANNEL, {"spawns": [body]})
+                else:
+                    initial_invokers.submit(body, extra_ms=ship_ms)
+
+            ctx = ExecutorContext(
+                dag=dag,
+                kv=kv,
+                spawn=spawn,
+                faults=faults,
+                heartbeats=heartbeats,
+                metrics=metrics,
+                inline_fanout_args=cfg.inline_fanout_args,
+                coalesce_batch=getattr(dag, "coalesce_batch", 0),
+                batch_kv_round_trips=cfg.batch_kv_round_trips,
+            )
+
+            waiter = _ResultWaiter(kv, dag.roots)
+            t0_ms = clock.now_ms()
+            # Initial Task Executor Invokers: one executor per start batch
+            # — one batch per static schedule (paper §IV-C), or fewer when
+            # the coalescing pass grouped sibling leaves.
+            for keys, sched in schedule_set.batches:
+                spawn(keys, {}, sched, width=1)
+
+            stop_monitor = clock.event()
+            clock.spawn(
+                lambda: _speculative_monitor(
+                    ctx, stop_monitor, cfg, schedule_set, clock),
+                name="spec-monitor",
+            )
+            try:
+                results = waiter.wait(cfg.job_timeout_s)
+            finally:
+                stop_monitor.set()
+                initial_invokers.close()
+                proxy_invokers.close()
+                if proxy is not None:
+                    proxy.close()
+                pool.shutdown(wait=False, cancel_futures=True)
+            wall = (clock.now_ms() - t0_ms) / 1e3
+            # Snapshot every counter INSIDE the actor block: the run
+            # token serializes this read against any still-draining
+            # leftover work (late retries/speculative duplicates), so
+            # the report is deterministic; outside the block those
+            # actors run OS-concurrently with us.
+            report = JobReport(
+                results=results,
+                wall_s=wall,
+                tasks=len(dag),
+                executors_invoked=initial_invokers.invocations
+                + proxy_invokers.invocations,
+                kv_stats=kv.stats.snapshot(),
+                metrics=list(metrics.records),
+                charged_ms=clock.charged_ms,
+                optimizer=getattr(dag, "pass_stats", ()),
+            )
+        return report
 
 
 def _executor_body(ctx, schedule, start_key, seed_cache, attempt, parent=None):
@@ -229,18 +259,22 @@ def _executor_body(ctx, schedule, start_key, seed_cache, attempt, parent=None):
     return body
 
 
-def _speculative_monitor(ctx, stop, cfg, schedule_set):
+def _speculative_monitor(ctx, stop, cfg, schedule_set, clock):
     """Re-invoke executors whose current task exceeds the straggler
-    threshold (beyond-paper straggler mitigation; safe via idempotence)."""
+    threshold (beyond-paper straggler mitigation; safe via idempotence).
+
+    Heartbeat ages come from the engine clock: under the virtual clock
+    they ARE simulated ms; in real-time mode they are real ms scaled back
+    to simulated by ``time_scale`` (the seed behavior)."""
     threshold_ms = cfg.faults.speculative_threshold_ms
     if threshold_ms == float("inf"):
         return
     respawned: set[int] = set()
     while not stop.wait(cfg.speculative_poll_s):
-        now = time.perf_counter()
+        now_ms = clock.now_ms()
         for hb in ctx.heartbeats.inflight():
-            age_ms = (now - hb.started_at) * 1e3
-            scale = cfg.cost.time_scale or 1.0
+            age_ms = now_ms - hb.started_at
+            scale = 1.0 if clock.virtual else (cfg.cost.time_scale or 1.0)
             if age_ms / scale > threshold_ms and hb.executor_id not in respawned:
                 respawned.add(hb.executor_id)
                 # Duplicate every member of a coalesced batch, each with
@@ -269,8 +303,8 @@ class CentralizedConfig:
     colocate_kv_shards: bool = False
     notification: str = "tcp"      # "tcp" (strawman) | "pubsub"
     num_invokers: int = 1          # >1 = parallel-invoker version
-    max_concurrency: int = 512
-    job_timeout_s: float = 600.0
+    max_concurrency: int = 4096    # lazily-created runtime workers
+    job_timeout_s: float = 600.0   # simulated s under VirtualClock
     # DAG compiler pipeline (chain fusion shrinks the one-Lambda-per-task
     # graph; the executor-level passes are no-ops here). None = verbatim.
     optimize: OptimizeConfig | None = None
@@ -293,94 +327,107 @@ class _CentralizedEngine:
             n_shards=cfg.n_kv_shards, cost=cfg.cost,
             colocate_shards=cfg.colocate_kv_shards,
         )
-        metrics = TaskMetrics()
-        pool = ThreadPoolExecutor(max_workers=cfg.max_concurrency)
-        invokers = InvokerPool(cfg.num_invokers, cfg.cost, kv.clock, pool)
-        done_q: "queue.Queue[tuple[str, Any]]" = queue.Queue()
-        inflight = [0]
-        inflight_lock = threading.Lock()
+        clock = kv.clock
+        with clock.actor():
+            metrics = TaskMetrics(clock)
+            pool = clock.pool(cfg.max_concurrency)
+            invokers = InvokerPool(cfg.num_invokers, cfg.cost, clock, pool)
+            done_q = clock.queue()
+            inflight = [0]
+            inflight_lock = threading.Lock()
 
-        # Scheduler-side message handling is serialized (the §III-B
-        # bottleneck). TCP mode additionally pays a per-connection setup
-        # and an IRQ-flood term that grows with the number of Lambdas
-        # holding open connections (paper §III-C) — the reason pub/sub
-        # pulls ahead as tasks get longer and waves of completions pile up.
-        def per_msg_ms() -> float:
-            if cfg.notification != "tcp":
-                return cfg.cost.pubsub_msg_ms
-            with inflight_lock:
-                n = inflight[0]
-            return (cfg.cost.tcp_connect_ms
-                    + cfg.cost.tcp_msg_ms * (1.0 + cfg.cost.tcp_irq_factor * n))
-
-        def lambda_body(key: str):
-            def body():
+            # Scheduler-side message handling is serialized (the §III-B
+            # bottleneck). TCP mode additionally pays a per-connection
+            # setup and an IRQ-flood term that grows with the number of
+            # Lambdas holding open connections (paper §III-C) — the reason
+            # pub/sub pulls ahead as tasks get longer and waves of
+            # completions pile up.
+            def per_msg_ms() -> float:
+                if cfg.notification != "tcp":
+                    return cfg.cost.pubsub_msg_ms
                 with inflight_lock:
-                    inflight[0] += 1
-                try:
-                    task = dag.tasks[key]
-                    t0 = time.perf_counter()
+                    n = inflight[0]
+                return (cfg.cost.tcp_connect_ms
+                        + cfg.cost.tcp_msg_ms
+                        * (1.0 + cfg.cost.tcp_irq_factor * n))
 
-                    def resolve(a):
-                        return kv.get(a.key) if isinstance(a, TaskRef) else a
-
-                    args = [resolve(a) for a in task.args]
-                    kwargs = {k: resolve(v) for k, v in task.kwargs.items()}
-                    read_ms = (time.perf_counter() - t0) * 1e3
-                    t0 = time.perf_counter()
-                    out = task.fn(*args, **kwargs)
-                    compute_ms = (time.perf_counter() - t0) * 1e3
-                    t0 = time.perf_counter()
-                    kv.put(key, out)
-                    write_ms = (time.perf_counter() - t0) * 1e3
-                    metrics.record(
-                        task=key, event="executed", read_ms=read_ms,
-                        compute_ms=compute_ms, write_ms=write_ms,
-                        nbytes=sizeof(out),
-                    )
-                    done_q.put((key, None))
-                except Exception as exc:  # pragma: no cover - surfaced below
-                    done_q.put((key, exc))
-                finally:
+            def lambda_body(key: str):
+                def body():
                     with inflight_lock:
-                        inflight[0] -= 1
+                        inflight[0] += 1
+                    try:
+                        task = dag.tasks[key]
+                        t0 = clock.now_ms()
 
-            return body
+                        def resolve(a):
+                            return kv.get(a.key) if isinstance(a, TaskRef) else a
 
-        indeg = {k: len(dag.deps[k]) for k in dag.tasks}
-        t0 = time.perf_counter()
-        for k in dag.leaves:
-            invokers.submit(lambda_body(k))
-        remaining = set(dag.tasks)
-        deadline = time.monotonic() + cfg.job_timeout_s
-        try:
-            while remaining:
-                timeout = deadline - time.monotonic()
-                if timeout <= 0:
-                    raise JobError(f"timeout; remaining={len(remaining)}")
-                key, err = done_q.get(timeout=timeout)
-                if err is not None:
-                    raise JobError(f"task {key!r} failed: {err!r}")
-                kv.clock.charge(per_msg_ms())  # serialized scheduler handling
-                remaining.discard(key)
-                for child in dag.children[key]:
-                    indeg[child] -= 1
-                    if indeg[child] == 0:
-                        invokers.submit(lambda_body(child))
-        finally:
-            invokers.close()
-            pool.shutdown(wait=False, cancel_futures=True)
-        wall = time.perf_counter() - t0
-        return JobReport(
-            results={k: kv.get(k) for k in dag.roots},
-            wall_s=wall,
-            tasks=len(dag),
-            executors_invoked=invokers.invocations,
-            kv_stats=kv.stats.snapshot(),
-            metrics=metrics.records,
-            charged_ms=kv.clock.charged_ms,
-            optimizer=getattr(dag, "pass_stats", ()),
-        )
+                        args = [resolve(a) for a in task.args]
+                        kwargs = {k: resolve(v)
+                                  for k, v in task.kwargs.items()}
+                        read_ms = clock.now_ms() - t0
+                        t0 = clock.now_ms()
+                        with task_clock(clock):
+                            out = task.fn(*args, **kwargs)
+                        compute_ms = clock.now_ms() - t0
+                        t0 = clock.now_ms()
+                        kv.put(key, out)
+                        write_ms = clock.now_ms() - t0
+                        metrics.record(
+                            task=key, event="executed", read_ms=read_ms,
+                            compute_ms=compute_ms, write_ms=write_ms,
+                            nbytes=sizeof(out),
+                        )
+                        done_q.put((key, None))
+                    except Exception as exc:  # pragma: no cover - see below
+                        done_q.put((key, exc))
+                    finally:
+                        with inflight_lock:
+                            inflight[0] -= 1
+
+                return body
+
+            indeg = {k: len(dag.deps[k]) for k in dag.tasks}
+            t0_ms = clock.now_ms()
+            for k in dag.leaves:
+                invokers.submit(lambda_body(k))
+            remaining = set(dag.tasks)
+            deadline = clock.now_ms() + cfg.job_timeout_s * 1e3
+            try:
+                while remaining:
+                    timeout_ms = deadline - clock.now_ms()
+                    if timeout_ms <= 0:
+                        raise JobError(f"timeout; remaining={len(remaining)}")
+                    try:
+                        key, err = done_q.get(timeout=timeout_ms / 1e3)
+                    except queue.Empty:
+                        continue
+                    if err is not None:
+                        raise JobError(f"task {key!r} failed: {err!r}")
+                    # serialized scheduler handling
+                    clock.charge(per_msg_ms())
+                    remaining.discard(key)
+                    for child in dag.children[key]:
+                        indeg[child] -= 1
+                        if indeg[child] == 0:
+                            invokers.submit(lambda_body(child))
+            finally:
+                invokers.close()
+                pool.shutdown(wait=False, cancel_futures=True)
+            wall = (clock.now_ms() - t0_ms) / 1e3
+            results = {k: kv.get(k) for k in dag.roots}
+            # Snapshot inside the actor block (see WukongEngine.compute).
+            report = JobReport(
+                results=results,
+                wall_s=wall,
+                tasks=len(dag),
+                executors_invoked=invokers.invocations,
+                kv_stats=kv.stats.snapshot(),
+                metrics=list(metrics.records),
+                charged_ms=clock.charged_ms,
+                optimizer=getattr(dag, "pass_stats", ()),
+            )
+        return report
 
 
 class StrawmanEngine(_CentralizedEngine):
@@ -424,7 +471,7 @@ class ServerfulConfig:
     cost: CostModel = dataclasses.field(default_factory=CostModel)
     n_workers: int = 25            # paper EC2: 5 VMs x 5 worker processes
     worker_bandwidth_mbps: float = 1000.0  # direct worker<->worker TCP
-    job_timeout_s: float = 600.0
+    job_timeout_s: float = 600.0   # simulated s under VirtualClock
     optimize: OptimizeConfig | None = None  # DAG compiler (chain fusion)
 
 
@@ -444,98 +491,109 @@ class ServerfulEngine:
         dag = ensure_compiled(dag, cfg.optimize)
         clock_cost = dataclasses.replace(cfg.cost)
         kv = ShardedKVStore(n_shards=1, cost=clock_cost)  # clock + channels
-        metrics = TaskMetrics()
-        owner: dict[str, int] = {}        # task key -> worker that holds it
-        data: list[dict[str, Any]] = [dict() for _ in range(cfg.n_workers)]
-        owner_lock = threading.Lock()
-        done_q: "queue.Queue[tuple[str, Any]]" = queue.Queue()
-        pool = ThreadPoolExecutor(max_workers=cfg.n_workers)
+        clock = kv.clock
+        with clock.actor():
+            metrics = TaskMetrics(clock)
+            owner: dict[str, int] = {}    # task key -> worker that holds it
+            data: list[dict[str, Any]] = [dict() for _ in range(cfg.n_workers)]
+            owner_lock = threading.Lock()
+            done_q = clock.queue()
+            pool = clock.pool(cfg.n_workers)
 
-        def run_on_worker(key: str, wid: int):
-            def body():
-                try:
-                    task = dag.tasks[key]
-                    t0 = time.perf_counter()
+            def run_on_worker(key: str, wid: int):
+                def body():
+                    try:
+                        task = dag.tasks[key]
+                        t0 = clock.now_ms()
 
-                    def resolve(a):
-                        if not isinstance(a, TaskRef):
-                            return a
+                        def resolve(a):
+                            if not isinstance(a, TaskRef):
+                                return a
+                            with owner_lock:
+                                src = owner[a.key]
+                                val = data[src][a.key]
+                            if src != wid:
+                                # direct TCP transfer between workers
+                                ms = sizeof(val) / (
+                                    cfg.worker_bandwidth_mbps * 1e6) * 1e3
+                                clock.charge(cfg.cost.tcp_msg_ms + ms)
+                            return val
+
+                        args = [resolve(a) for a in task.args]
+                        kwargs = {k: resolve(v)
+                                  for k, v in task.kwargs.items()}
+                        read_ms = clock.now_ms() - t0
+                        t0 = clock.now_ms()
+                        with task_clock(clock):
+                            out = task.fn(*args, **kwargs)
+                        compute_ms = clock.now_ms() - t0
                         with owner_lock:
-                            src = owner[a.key]
-                            val = data[src][a.key]
-                        if src != wid:
-                            # direct TCP transfer between workers
-                            ms = sizeof(val) / (
-                                cfg.worker_bandwidth_mbps * 1e6) * 1e3
-                            kv.clock.charge(cfg.cost.tcp_msg_ms + ms)
-                        return val
+                            data[wid][key] = out
+                            owner[key] = wid
+                        metrics.record(task=key, event="executed",
+                                       read_ms=read_ms,
+                                       compute_ms=compute_ms,
+                                       write_ms=0.0, nbytes=sizeof(out))
+                        done_q.put((key, None))
+                    except Exception as exc:
+                        done_q.put((key, exc))
 
-                    args = [resolve(a) for a in task.args]
-                    kwargs = {k: resolve(v) for k, v in task.kwargs.items()}
-                    read_ms = (time.perf_counter() - t0) * 1e3
-                    t0 = time.perf_counter()
-                    out = task.fn(*args, **kwargs)
-                    compute_ms = (time.perf_counter() - t0) * 1e3
-                    with owner_lock:
-                        data[wid][key] = out
-                        owner[key] = wid
-                    metrics.record(task=key, event="executed",
-                                   read_ms=read_ms, compute_ms=compute_ms,
-                                   write_ms=0.0, nbytes=sizeof(out))
-                    done_q.put((key, None))
-                except Exception as exc:
-                    done_q.put((key, exc))
+                return body
 
-            return body
+            def pick_worker(key: str, rr: int) -> int:
+                # locality: the worker holding the most input bytes
+                best, best_bytes = rr % cfg.n_workers, -1
+                with owner_lock:
+                    counts: dict[int, int] = {}
+                    for dep in dag.deps[key]:
+                        w = owner.get(dep)
+                        if w is not None:
+                            counts[w] = counts.get(w, 0) + sizeof(data[w][dep])
+                for w, b in counts.items():
+                    if b > best_bytes:
+                        best, best_bytes = w, b
+                return best
 
-        def pick_worker(key: str, rr: int) -> int:
-            # locality: the worker holding the most input bytes
-            best, best_bytes = rr % cfg.n_workers, -1
+            indeg = {k: len(dag.deps[k]) for k in dag.tasks}
+            t0_ms = clock.now_ms()
+            rr = 0
+            for k in dag.leaves:
+                pool.submit(run_on_worker(k, pick_worker(k, rr)))
+                rr += 1
+            remaining = set(dag.tasks)
+            deadline = clock.now_ms() + cfg.job_timeout_s * 1e3
+            try:
+                while remaining:
+                    timeout_ms = deadline - clock.now_ms()
+                    if timeout_ms <= 0:
+                        raise JobError(f"timeout; remaining={len(remaining)}")
+                    try:
+                        key, err = done_q.get(timeout=timeout_ms / 1e3)
+                    except queue.Empty:
+                        continue
+                    if err is not None:
+                        raise JobError(f"task {key!r} failed: {err!r}")
+                    clock.charge(cfg.cost.tcp_msg_ms)  # scheduler handling
+                    remaining.discard(key)
+                    for child in dag.children[key]:
+                        indeg[child] -= 1
+                        if indeg[child] == 0:
+                            pool.submit(
+                                run_on_worker(child, pick_worker(child, rr)))
+                            rr += 1
+            finally:
+                pool.shutdown(wait=False, cancel_futures=True)
+            wall = (clock.now_ms() - t0_ms) / 1e3
             with owner_lock:
-                counts: dict[int, int] = {}
-                for dep in dag.deps[key]:
-                    w = owner.get(dep)
-                    if w is not None:
-                        counts[w] = counts.get(w, 0) + sizeof(data[w][dep])
-            for w, b in counts.items():
-                if b > best_bytes:
-                    best, best_bytes = w, b
-            return best
-
-        indeg = {k: len(dag.deps[k]) for k in dag.tasks}
-        t0 = time.perf_counter()
-        rr = 0
-        for k in dag.leaves:
-            pool.submit(run_on_worker(k, pick_worker(k, rr)))
-            rr += 1
-        remaining = set(dag.tasks)
-        deadline = time.monotonic() + cfg.job_timeout_s
-        try:
-            while remaining:
-                timeout = deadline - time.monotonic()
-                if timeout <= 0:
-                    raise JobError(f"timeout; remaining={len(remaining)}")
-                key, err = done_q.get(timeout=timeout)
-                if err is not None:
-                    raise JobError(f"task {key!r} failed: {err!r}")
-                kv.clock.charge(cfg.cost.tcp_msg_ms)  # scheduler handling
-                remaining.discard(key)
-                for child in dag.children[key]:
-                    indeg[child] -= 1
-                    if indeg[child] == 0:
-                        pool.submit(run_on_worker(child, pick_worker(child, rr)))
-                        rr += 1
-        finally:
-            pool.shutdown(wait=False, cancel_futures=True)
-        wall = time.perf_counter() - t0
-        with owner_lock:
-            results = {k: data[owner[k]][k] for k in dag.roots}
-        return JobReport(
-            results=results, wall_s=wall, tasks=len(dag),
-            executors_invoked=0, kv_stats=kv.stats.snapshot(),
-            metrics=metrics.records, charged_ms=kv.clock.charged_ms,
-            optimizer=getattr(dag, "pass_stats", ()),
-        )
+                results = {k: data[owner[k]][k] for k in dag.roots}
+            # Snapshot inside the actor block (see WukongEngine.compute).
+            report = JobReport(
+                results=results, wall_s=wall, tasks=len(dag),
+                executors_invoked=0, kv_stats=kv.stats.snapshot(),
+                metrics=list(metrics.records), charged_ms=clock.charged_ms,
+                optimizer=getattr(dag, "pass_stats", ()),
+            )
+        return report
 
 
 ENGINES = {

@@ -36,7 +36,6 @@ Optimizer integration (repro.core.optimize):
 from __future__ import annotations
 
 import threading
-import time
 from typing import Any, Callable
 
 from repro.core.dag import DAG, TaskRef
@@ -48,18 +47,26 @@ from repro.core.faults import (
 )
 from repro.core.kvstore import ShardedKVStore, sizeof
 from repro.core.schedule import StaticSchedule, _counter_id
+from repro.core.simclock import BaseClock, task_clock
 
 RESULTS_CHANNEL = "__results__"
 
 
 class TaskMetrics:
-    """Per-task timing records for the Fig.13-style CDF breakdown."""
+    """Per-task timing records for the Fig.13-style CDF breakdown.
 
-    def __init__(self) -> None:
+    Every record is stamped ``at_ms`` from the engine clock — virtual
+    milliseconds under the virtual clock, so the fig13 CDF is
+    deterministic and independent of host load."""
+
+    def __init__(self, clock: BaseClock | None = None) -> None:
         self._lock = threading.Lock()
+        self.clock = clock
         self.records: list[dict[str, Any]] = []
 
     def record(self, **kw: Any) -> None:
+        if self.clock is not None and "at_ms" not in kw:
+            kw["at_ms"] = self.clock.now_ms()
         with self._lock:
             self.records.append(kw)
 
@@ -139,16 +146,19 @@ class TaskExecutor:
 
     def _publish_local_deps_of(self, key: str) -> float:
         """Publish locally-held objects that ``key`` depends on. Returns
-        simulated/wall ms spent writing."""
-        t0 = time.perf_counter()
+        simulated ms spent writing (clock delta: charged latency plus any
+        lane-contention queueing)."""
+        clock = self.ctx.kv.clock
+        t0 = clock.now_ms()
         for dep in self.ctx.dag.deps[key]:
             if dep in self.cache:
                 self.ctx.kv.put_if_absent(dep, self.cache[dep])
-        return (time.perf_counter() - t0) * 1e3
+        return clock.now_ms() - t0
 
     def _gather_inputs(self, key: str) -> tuple[list[Any], dict[str, Any], float]:
         task = self.ctx.dag.tasks[key]
-        t0 = time.perf_counter()
+        clock = self.ctx.kv.clock
+        t0 = clock.now_ms()
 
         # Remote inputs (not in the local cache) are fetched in ONE
         # pipelined mget — keys grouped by shard, one base round trip per
@@ -176,7 +186,7 @@ class TaskExecutor:
 
         args = [resolve(a) for a in task.args]
         kwargs = {k: resolve(v) for k, v in task.kwargs.items()}
-        return args, kwargs, (time.perf_counter() - t0) * 1e3
+        return args, kwargs, clock.now_ms() - t0
 
     # -- the walk -------------------------------------------------------------
     def run(self) -> None:
@@ -184,7 +194,7 @@ class TaskExecutor:
             executor_id=self.executor_id,
             start_key=self.start_key,
             current_key=self.start_key,
-            started_at=time.perf_counter(),
+            started_at=self.ctx.kv.clock.now_ms(),
             parent=self.parent,
             start_keys=self.start_keys,
         )
@@ -194,6 +204,11 @@ class TaskExecutor:
         except SimulatedTaskFailure:
             failed = self._failed_at
             if self.attempt < self.ctx.faults.config.max_retries:
+                # Lambda's retry delay: charged (not slept) on the clock,
+                # exponential in the attempt number.
+                backoff = self.ctx.faults.retry_backoff_ms(self.attempt)
+                if backoff > 0:
+                    self.ctx.kv.clock.charge(backoff)
                 # Lambda automatic retry: fresh container. Only the failing
                 # start re-runs on the incremented attempt; completed walks
                 # are durable (idempotent deposits/spawns), and un-walked
@@ -245,6 +260,7 @@ class TaskExecutor:
     def _walk_from(self, start: str) -> None:
         dag = self.ctx.dag
         kv = self.ctx.kv
+        clock = kv.clock
         current = start
         prev: str | None = self.parent
 
@@ -268,11 +284,11 @@ class TaskExecutor:
                     expected = tuple(
                         dep for dep in dag.deps[current] if dep not in items
                     )
-                    t0 = time.perf_counter()
+                    t0 = clock.now_ms()
                     count, missing = kv.deposit_and_increment(
                         _counter_id(current), edge, items, expected
                     )
-                    write_ms = (time.perf_counter() - t0) * 1e3
+                    write_ms = clock.now_ms() - t0
                 else:
                     write_ms = self._publish_local_deps_of(current)
                     count = kv.increment_dependency(
@@ -313,7 +329,7 @@ class TaskExecutor:
                 executor_id=self.executor_id,
                 start_key=self.start_key,
                 current_key=current,
-                started_at=time.perf_counter(),
+                started_at=clock.now_ms(),
                 parent=self.parent,
                 start_keys=self.start_keys,
             )
@@ -325,9 +341,13 @@ class TaskExecutor:
             if straggle > 0:
                 kv.clock.charge(straggle)
 
-            t0 = time.perf_counter()
-            out = dag.tasks[current].fn(*args, **kwargs)
-            compute_ms = (time.perf_counter() - t0) * 1e3
+            # The engine clock is installed for the duration of the task
+            # function so workload-declared compute (simulated_compute /
+            # per-flop costs) is charged as simulated time.
+            t0 = clock.now_ms()
+            with task_clock(clock):
+                out = dag.tasks[current].fn(*args, **kwargs)
+            compute_ms = clock.now_ms() - t0
             self.cache[current] = out
             self.tasks_executed += 1
             # One sizeof walk per output, reused by metrics and as the
@@ -337,9 +357,9 @@ class TaskExecutor:
             children = dag.children[current]
             # ---- sink: final result --------------------------------------
             if not children:
-                t0 = time.perf_counter()
+                t0 = clock.now_ms()
                 kv.put_if_absent(current, out, nbytes=out_nbytes)
-                write_ms = (time.perf_counter() - t0) * 1e3
+                write_ms = clock.now_ms() - t0
                 kv.publish(
                     RESULTS_CHANNEL,
                     {"type": "result", "key": current},
@@ -367,9 +387,9 @@ class TaskExecutor:
             if not self.ctx.inline_fanout_args:
                 # Intermediate outputs needed by the new executors go to the
                 # KV store; invoked executors receive the keys (paper §IV-C).
-                t0 = time.perf_counter()
+                t0 = clock.now_ms()
                 kv.put_if_absent(current, out, nbytes=out_nbytes)
-                write_ms = (time.perf_counter() - t0) * 1e3
+                write_ms = clock.now_ms() - t0
                 seed: dict[str, Any] = {}
             else:
                 # Beyond-paper optimization: carry the value inline with the

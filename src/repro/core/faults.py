@@ -30,6 +30,10 @@ class SimulatedTaskFailure(RuntimeError):
 class FaultConfig:
     task_failure_prob: float = 0.0   # per task attempt
     max_retries: int = 2             # AWS Lambda automatic retry limit
+    # Simulated delay before a retry attempt is re-invoked (Lambda waits
+    # ~1 min between automatic retries; default 0 keeps the seed
+    # behavior). Exponential: attempt k is delayed 2**k * base.
+    retry_backoff_base_ms: float = 0.0
     straggler_prob: float = 0.0      # per task attempt
     straggler_slowdown_ms: float = 0.0
     speculative_threshold_ms: float = float("inf")  # re-invoke beyond this
@@ -42,6 +46,15 @@ class FaultInjector:
     def __init__(self, config: FaultConfig):
         self.config = config
         self._lock = threading.Lock()
+
+    def retry_backoff_ms(self, attempt: int) -> float:
+        """Simulated delay charged before respawning retry ``attempt+1``
+        (charged on the engine clock, so under the virtual clock it
+        advances simulated time without wall-time cost)."""
+        base = self.config.retry_backoff_base_ms
+        if base <= 0:
+            return 0.0
+        return base * (2.0 ** attempt)
 
     def _rng(self, task_key: str, attempt: int) -> random.Random:
         # Stable across processes: tuple.__hash__ mixes in the
@@ -72,7 +85,7 @@ class ExecutorHeartbeat:
     executor_id: int
     start_key: str
     current_key: str
-    started_at: float
+    started_at: float  # engine-clock ms (virtual ms under VirtualClock)
     parent: str | None = None
     # Full start batch for coalesced executors (speculative duplicates
     # must cover every member, not just the first).

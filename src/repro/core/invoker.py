@@ -11,48 +11,55 @@ calls concurrently:
   KV Store Proxy, whose Fan-out Invokers make the invocations in parallel
   (paper §IV-D "Large Fan-out Task Invocations").
 
-Each invoker lane charges ``invoke_ms`` serially per call; P lanes give P×
-invocation throughput — the (near-)linear speedup of §III-C.
+Each invoker lane charges the invocation latency serially per call; P
+lanes give P× invocation throughput — the (near-)linear speedup of
+§III-C. Latency per call is drawn from ``CostModel.invoke_draw``: a
+seeded lognormal jitter on ``invoke_ms`` plus a cold start with
+probability ``1 - warm_fraction`` — a *distribution*, not a constant,
+once those knobs are set, and reproducible because draws are keyed on
+the invocation index (which the virtual clock makes deterministic).
+
+All blocking (work queues, lane threads) goes through the engine clock's
+primitives, so under the virtual clock an idle invoker lane costs zero
+wall time and never holds back virtual-time advancement.
 """
 from __future__ import annotations
 
-import queue
 import threading
-from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Callable
 
-from repro.core.kvstore import Clock, CostModel
+from repro.core.kvstore import CostModel
+from repro.core.simclock import BaseClock
 
 
 class InvokerPool:
-    """N invoker lanes; each lane issues invocations serially at invoke_ms.
+    """N invoker lanes; each lane issues invocations serially.
 
     ``submit`` enqueues an invocation request; a free lane picks it up,
-    charges the invocation API latency (plus cold-start when the warm pool
-    misses), then hands the executor body to the runtime thread pool.
+    charges the invocation API latency (jitter + cold-start drawn from
+    the cost model's seeded distribution), then hands the executor body
+    to the runtime pool.
     """
 
     def __init__(
         self,
         n_invokers: int,
         cost: CostModel,
-        clock: Clock,
-        runtime_pool: ThreadPoolExecutor,
+        clock: BaseClock,
+        runtime_pool: Any,
         name: str = "invoker",
     ):
         self.cost = cost
         self.clock = clock
         self.runtime_pool = runtime_pool
-        self._q: "queue.Queue[tuple[Callable[[], Any], float] | None]" = queue.Queue()
-        self._lanes = [
-            threading.Thread(target=self._lane, name=f"{name}-{i}", daemon=True)
-            for i in range(max(1, n_invokers))
-        ]
+        self._q = clock.queue()
         self.invocations = 0
+        self.cold_starts = 0
         self._lock = threading.Lock()
         self._closed = False
-        for t in self._lanes:
-            t.start()
+        self._n_lanes = max(1, n_invokers)
+        for i in range(self._n_lanes):
+            clock.spawn(self._lane, name=f"{name}-{i}")
 
     def _lane(self) -> None:
         while True:
@@ -60,10 +67,15 @@ class InvokerPool:
             if item is None:
                 return
             body, extra_ms = item
-            # Invocation API latency is paid serially per lane.
-            self.clock.charge(self.cost.invoke_ms + extra_ms)
             with self._lock:
                 self.invocations += 1
+                index = self.invocations
+            invoke_ms, cold = self.cost.invoke_draw(index)
+            if cold:
+                with self._lock:
+                    self.cold_starts += 1
+            # Invocation API latency is paid serially per lane.
+            self.clock.charge(invoke_ms + extra_ms)
             try:
                 self.runtime_pool.submit(body)
             except RuntimeError:
@@ -78,7 +90,7 @@ class InvokerPool:
 
     def close(self) -> None:
         self._closed = True
-        for _ in self._lanes:
+        for _ in range(self._n_lanes):
             self._q.put(None)
 
 
@@ -97,19 +109,16 @@ class FanoutProxy:
         self.kv = kv
         self.invokers = invokers
         self._sub = kv.subscribe(self.CHANNEL)
-        self._thread = threading.Thread(
-            target=self._serve, name="kv-proxy", daemon=True
-        )
         self._stop = threading.Event()
         self.handled_fanouts = 0
-        self._thread.start()
+        kv.clock.spawn(self._serve, name="kv-proxy")
 
     def _serve(self) -> None:
+        # Event-driven: the proxy blocks on its subscription (costing
+        # zero wall time under the virtual clock) until a fan-out message
+        # or the ``None`` shutdown sentinel published by ``close``.
         while not self._stop.is_set():
-            try:
-                msg = self._sub.get(timeout=0.05)
-            except queue.Empty:
-                continue
+            msg = self._sub.get()
             if msg is None:
                 return
             spawn_fns = msg["spawns"]  # list of zero-arg callables

@@ -5,7 +5,10 @@ partitioned across shards (paper ran 10 c5.18xlarge shards). Because this
 container has no AWS, the *costs* of the serverless environment are
 simulated and the *algorithms* are real:
 
-- every op pays a base latency plus size/bandwidth transfer time,
+- every op pays a base latency plus size/bandwidth transfer time, charged
+  on the engine clock (repro.core.simclock) — the deterministic virtual
+  discrete-event clock by default, the seed real-sleep mode when
+  ``CostModel.time_scale > 0``,
 - a shard's transfer lane is held for the duration of a transfer, so
   concurrent large transfers to one shard queue up — this reproduces the
   NIC contention that §V-B measured ("running each KV Store shard on its
@@ -45,11 +48,12 @@ from __future__ import annotations
 
 import dataclasses
 import pickle
-import queue
+import random
 import threading
-import time
 import zlib
 from typing import Any, Iterable, Mapping
+
+from repro.core.simclock import BaseClock, clock_for_scale
 
 
 def sizeof(value: Any) -> int:
@@ -79,14 +83,28 @@ class CostModel:
 
     Defaults follow the paper's measurements where it gives them
     (invoke_ms ~50ms via boto3) and plausible AWS numbers elsewhere.
-    ``time_scale`` converts simulated ms to real sleep seconds; 0 disables
-    sleeping entirely (used by unit tests, which check protocol
-    correctness, not timing).
+
+    ``time_scale`` selects the clock mode (repro.core.simclock): 0 — the
+    default — runs on the deterministic virtual discrete-event clock
+    (idle simulated time costs zero wall time, runs are bit-identical);
+    > 0 keeps the seed real-time mode, really sleeping
+    ``ms * time_scale / 1e3`` seconds per charge, for sanity
+    cross-checks against the virtual substrate.
+
+    Invocation latency is a seeded *distribution*, not a constant, when
+    the jitter/cold-start knobs are set: each invocation ``index`` draws
+    a lognormal multiplier on ``invoke_ms`` (``invoke_sigma``) and a
+    cold start with probability ``1 - warm_fraction`` adding
+    ``cold_start_ms`` — the cost dimension ServerMix argues dominates
+    serverless analytics. Draws are keyed on ``(latency_seed, index)``
+    so runs are reproducible.
     """
 
     invoke_ms: float = 50.0          # Lambda invocation API call (paper §III-C)
     cold_start_ms: float = 250.0     # container cold start (paper §II-A)
     warm_fraction: float = 1.0       # paper warms a pool of Lambdas (§V-A)
+    invoke_sigma: float = 0.0        # lognormal sigma on invoke_ms (0 = const)
+    latency_seed: int = 0            # seed for the invocation-latency draws
     kv_base_ms: float = 0.5          # per-op KV latency
     kv_bandwidth_mbps: float = 600.0 # per-shard transfer lane
     tcp_connect_ms: float = 4.0      # per-Lambda TCP connect (strawman)
@@ -107,22 +125,23 @@ class CostModel:
     def transfer_ms(self, nbytes: int) -> float:
         return nbytes / (self.kv_bandwidth_mbps * 1e6) * 1e3
 
+    def invoke_draw(self, index: int) -> "tuple[float, bool]":
+        """(latency_ms, was_cold) for invocation number ``index``.
 
-class Clock:
-    """Charges simulated latency (optionally sleeping) and accounts totals."""
-
-    def __init__(self, cost: CostModel):
-        self.cost = cost
-        self._lock = threading.Lock()
-        self.charged_ms = 0.0
-
-    def charge(self, ms: float) -> None:
-        if ms <= 0:
-            return
-        with self._lock:
-            self.charged_ms += ms
-        if self.cost.time_scale > 0:
-            time.sleep(ms * self.cost.time_scale / 1e3)
+        Deterministic per (latency_seed, index) via crc32, the same
+        process-stable hashing the fault injector and shard placement
+        use (tuple/str hash() is a PYTHONHASHSEED lottery)."""
+        ms = self.invoke_ms
+        if self.invoke_sigma <= 0 and self.warm_fraction >= 1.0:
+            return ms, False
+        token = f"{self.latency_seed}|invoke|{index}".encode()
+        rng = random.Random(zlib.crc32(token))
+        if self.invoke_sigma > 0:
+            ms *= rng.lognormvariate(0.0, self.invoke_sigma)
+        cold = rng.random() >= self.warm_fraction
+        if cold:
+            ms += self.cold_start_ms
+        return ms, cold
 
 
 @dataclasses.dataclass
@@ -181,10 +200,13 @@ def _stripe_key(key: str, i: int) -> str:
 
 
 class _Shard:
-    def __init__(self) -> None:
+    def __init__(self, lane: Any) -> None:
         self.data: dict[str, Any] = {}
         self.lock = threading.Lock()          # metadata atomicity
-        self.lane = threading.Lock()          # transfer lane (NIC contention)
+        # Transfer lane (NIC contention): a clock-aware lock, so an actor
+        # holding the lane across a simulated transfer cooperates with
+        # the virtual clock instead of wedging it.
+        self.lane = lane
 
 
 class ShardedKVStore:
@@ -196,22 +218,24 @@ class ShardedKVStore:
         cost: CostModel | None = None,
         colocate_shards: bool = False,
         counter_mode: str = "edge_set",
+        clock: BaseClock | None = None,
     ):
         if counter_mode not in ("edge_set", "paper"):
             raise ValueError(counter_mode)
         self.cost = cost or CostModel()
-        self.clock = Clock(self.cost)
-        self.shards = [_Shard() for _ in range(max(1, n_shards))]
+        self.clock: BaseClock = clock or clock_for_scale(self.cost.time_scale)
         if colocate_shards:
             # all shards share one VM -> one NIC -> one transfer lane
-            shared = self.shards[0].lane
-            for s in self.shards:
-                s.lane = shared
+            shared = self.clock.lock()
+            self.shards = [_Shard(shared) for _ in range(max(1, n_shards))]
+        else:
+            self.shards = [_Shard(self.clock.lock())
+                           for _ in range(max(1, n_shards))]
         self.counter_mode = counter_mode
         self._counters: dict[str, set[str] | int] = {}
         self._counter_widths: dict[str, int] = {}
         self._counter_lock = threading.Lock()
-        self._channels: dict[str, list[queue.Queue]] = {}
+        self._channels: dict[str, list[Any]] = {}
         self._chan_lock = threading.Lock()
         self.stats = KVStats()
         self._stats_lock = threading.Lock()
@@ -568,8 +592,11 @@ class ShardedKVStore:
             return len(cur) if isinstance(cur, set) else int(cur)
 
     # -- pub/sub (paper §III-B) ---------------------------------------------
-    def subscribe(self, channel: str) -> "queue.Queue[Any]":
-        q: queue.Queue[Any] = queue.Queue()
+    def subscribe(self, channel: str) -> Any:
+        """Returns a ``queue.Queue``-compatible subscription (clock-aware
+        in virtual mode, so blocked subscribers never hold back virtual
+        time)."""
+        q = self.clock.queue()
         with self._chan_lock:
             self._channels.setdefault(channel, []).append(q)
         return q

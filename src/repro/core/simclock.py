@@ -1,0 +1,709 @@
+"""Virtual-time simulation core: a deterministic discrete-event substrate.
+
+Every engine layer (KV store, executors, invoker pools, schedulers, the
+fault monitor) charges FaaS latency on a *clock* instead of calling
+``time.sleep``/``time.monotonic`` directly. Two implementations share one
+interface:
+
+- ``VirtualClock`` (the default, selected by ``CostModel.time_scale == 0``)
+  is a cooperative discrete-event scheduler over real threads. Threads
+  register as *actors*; exactly one actor runs at a time (a run token),
+  and every blocking operation — a simulated-latency charge, a queue
+  ``get``, a transfer-lane ``acquire``, an event ``wait`` — yields the
+  token through the clock. Virtual time advances to the next pending
+  timer only when every actor is quiescent (blocked on an event or a
+  timer), so a 512-leaf tree reduction that takes ~40 s of *simulated*
+  time runs in well under a second of *wall* time — and, because the
+  token handoff order is a pure function of the event sequence, runs are
+  bit-identical: same ``wall_s``, same ``charged_ms``, same metrics.
+
+- ``RealtimeClock`` (``time_scale > 0``) is the seed behavior kept for
+  sanity cross-checks: charges really sleep ``ms * time_scale / 1e3``
+  seconds, and the primitives are the plain ``threading``/``queue``
+  ones. ``REPRO_SIM_SCALE`` is only needed for this mode.
+
+Both clocks expose the *same* primitive factories (``queue()``,
+``lock()``, ``event()``, ``pool()``, ``spawn()``), so the engines contain
+no mode branches: they are written once against the clock and the mode is
+picked by the cost model.
+
+Determinism contract (virtual mode): actors are scheduled FIFO in the
+order they became ready; timers fire in (deadline, registration-seq)
+order; queue/lock waiters are served FIFO. Any randomness (invoke-latency
+jitter, cold starts, fault injection) is drawn from counters/keys hashed
+with seeds — never from wall time — so two runs of the same job produce
+identical traces.
+
+Threads that never registered as actors (unit tests driving the KV store
+directly, external callers) degrade gracefully: their charges accumulate
+``charged_ms`` without advancing virtual time, and their blocking waits
+use real condition variables with real timeouts.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import queue as _queue
+import threading
+import time
+from typing import Any, Callable
+
+__all__ = [
+    "BaseClock",
+    "RealtimeClock",
+    "VirtualClock",
+    "clock_for_scale",
+    "simulated_compute",
+    "task_clock",
+]
+
+
+# ---------------------------------------------------------------------------
+# Task-payload compute charging.
+#
+# Workload DAGs (tree reduction, GEMM, SVD, SVC) declare per-task compute
+# duration in *simulated* ms. The executor installs the engine's clock in
+# a thread-local around each task-function call; `simulated_compute`
+# charges the duration on whatever clock is installed. Outside an engine
+# (sequential reference evaluation in tests) it is free: reference
+# results never depend on timing.
+# ---------------------------------------------------------------------------
+
+_task_clock = threading.local()
+
+
+class task_clock:
+    """Context manager installing ``clock`` as the current task clock."""
+
+    def __init__(self, clock: "BaseClock | None"):
+        self.clock = clock
+
+    def __enter__(self) -> None:
+        self._prev = getattr(_task_clock, "clock", None)
+        _task_clock.clock = self.clock
+
+    def __exit__(self, *exc: Any) -> None:
+        _task_clock.clock = self._prev
+
+
+def simulated_compute(ms: float) -> None:
+    """Charge ``ms`` simulated milliseconds of task compute on the
+    engine clock running this task (no-op outside an engine)."""
+    clock = getattr(_task_clock, "clock", None)
+    if clock is not None and ms > 0:
+        clock.charge(ms)
+
+
+# ---------------------------------------------------------------------------
+# Worker-thread cache.
+#
+# Engines spawn hundreds of short-lived actor threads per job (invoker
+# lanes, runtime-pool workers, monitors). OS thread creation is ~100s of
+# microseconds — a large fraction of a virtual run's wall time — so
+# finished workers park here and get re-dispatched instead of dying.
+# Recycling is invisible to the simulation: the *actor slot* is created
+# deterministically by ``spawn``; which OS thread services it is not an
+# event the discrete-event scheduler can observe.
+# ---------------------------------------------------------------------------
+
+_WORKER_CACHE_MAX = 2048
+_worker_cache: "list[_CachedWorker]" = []
+_worker_cache_lock = threading.Lock()
+
+
+class _CachedWorker(threading.Thread):
+    def __init__(self) -> None:
+        super().__init__(daemon=True, name="simclock-worker")
+        self._sem = threading.Semaphore(0)
+        self._job: Callable[[], None] | None = None
+        self.start()
+
+    def run(self) -> None:
+        while True:
+            self._sem.acquire()
+            job, self._job = self._job, None
+            if job is None:
+                return
+            job()  # an escaping exception retires this thread (no recycle)
+            with _worker_cache_lock:
+                if len(_worker_cache) >= _WORKER_CACHE_MAX:
+                    return
+                _worker_cache.append(self)
+
+    def dispatch(self, job: Callable[[], None]) -> None:
+        self._job = job
+        self._sem.release()
+
+
+def _dispatch_to_worker(job: Callable[[], None]) -> None:
+    with _worker_cache_lock:
+        worker = _worker_cache.pop() if _worker_cache else None
+    (worker or _CachedWorker()).dispatch(job)
+
+
+# ---------------------------------------------------------------------------
+# Shared interface
+# ---------------------------------------------------------------------------
+
+
+class BaseClock:
+    """Accounting shared by both clock implementations."""
+
+    virtual: bool = False
+
+    def __init__(self) -> None:
+        self._charge_lock = threading.Lock()
+        self.charged_ms = 0.0
+
+    def _account(self, ms: float) -> None:
+        with self._charge_lock:
+            self.charged_ms += ms
+
+    # subclass API ----------------------------------------------------------
+    def charge(self, ms: float) -> None:  # bill + advance simulated time
+        raise NotImplementedError
+
+    def now_ms(self) -> float:  # simulated (virtual) / real elapsed ms
+        raise NotImplementedError
+
+    def queue(self) -> Any:  # queue.Queue-compatible
+        raise NotImplementedError
+
+    def lock(self) -> Any:  # context-manager lock (transfer lanes)
+        raise NotImplementedError
+
+    def event(self) -> Any:  # threading.Event-compatible
+        raise NotImplementedError
+
+    def pool(self, max_workers: int) -> Any:  # .submit(fn) / .shutdown()
+        raise NotImplementedError
+
+    def spawn(self, fn: Callable[[], None], name: str) -> None:
+        raise NotImplementedError
+
+    def actor(self) -> Any:  # context manager registering current thread
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# Real-time clock (the seed behavior, kept for cross-checks)
+# ---------------------------------------------------------------------------
+
+
+class _RealtimePool:
+    """Thin ThreadPoolExecutor wrapper pinning the two methods engines use."""
+
+    def __init__(self, max_workers: int):
+        from concurrent.futures import ThreadPoolExecutor
+
+        self._tpe = ThreadPoolExecutor(max_workers=max_workers)
+
+    def submit(self, fn: Callable[[], Any]) -> None:
+        self._tpe.submit(fn)
+
+    def shutdown(self, wait: bool = False,
+                 cancel_futures: bool = True) -> None:
+        self._tpe.shutdown(wait=wait, cancel_futures=cancel_futures)
+
+
+class _NullActor:
+    def __enter__(self) -> None:
+        return None
+
+    def __exit__(self, *exc: Any) -> None:
+        return None
+
+
+class RealtimeClock(BaseClock):
+    """Charges simulated latency by really sleeping ``ms * time_scale``."""
+
+    virtual = False
+
+    def __init__(self, time_scale: float):
+        super().__init__()
+        self.time_scale = time_scale
+        self._t0 = time.perf_counter()
+
+    def charge(self, ms: float) -> None:
+        if ms <= 0:
+            return
+        self._account(ms)
+        if self.time_scale > 0:
+            time.sleep(ms * self.time_scale / 1e3)
+
+    def now_ms(self) -> float:
+        return (time.perf_counter() - self._t0) * 1e3
+
+    def queue(self) -> "_queue.Queue[Any]":
+        return _queue.Queue()
+
+    def lock(self) -> threading.Lock:
+        return threading.Lock()
+
+    def event(self) -> threading.Event:
+        return threading.Event()
+
+    def pool(self, max_workers: int) -> _RealtimePool:
+        return _RealtimePool(max_workers)
+
+    def spawn(self, fn: Callable[[], None], name: str) -> None:
+        _dispatch_to_worker(fn)
+
+    def actor(self) -> _NullActor:
+        return _NullActor()
+
+
+# ---------------------------------------------------------------------------
+# Virtual clock: cooperative discrete-event scheduling
+# ---------------------------------------------------------------------------
+
+_RUNNING = "running"
+_READY = "ready"
+_BLOCKED = "blocked"
+
+_WAKE_SIGNAL = "signal"
+_WAKE_TIMEOUT = "timeout"
+
+
+class _Actor:
+    __slots__ = ("seq", "cond", "state", "wake_reason", "timer")
+
+    def __init__(self, seq: int, mutex: threading.Lock):
+        self.seq = seq
+        self.cond = threading.Condition(mutex)
+        self.state = _READY
+        self.wake_reason: str | None = None
+        self.timer: "_Timer | None" = None  # pending virtual timeout
+
+
+class _Timer:
+    __slots__ = ("deadline", "actor", "cancelled")
+
+    def __init__(self, deadline: float, actor: _Actor):
+        self.deadline = deadline
+        self.actor = actor
+        self.cancelled = False
+
+    def __lt__(self, other: "_Timer") -> bool:  # heap tiebreak
+        return (self.deadline, self.actor.seq) < (
+            other.deadline, other.actor.seq)
+
+
+class _ExternalWaiter:
+    """A non-actor thread blocked on a clock primitive (tests, legacy
+    callers). It waits on a real condition with a real timeout and does
+    not hold back virtual-time advancement."""
+
+    __slots__ = ("cond", "signalled")
+
+    def __init__(self, mutex: threading.Lock):
+        self.cond = threading.Condition(mutex)
+        self.signalled = False
+
+
+class VirtualClock(BaseClock):
+    """Deterministic discrete-event clock over cooperative actor threads.
+
+    Exactly one registered actor holds the run token at any moment; all
+    others are parked on per-actor condition variables sharing one mutex.
+    Blocking operations release the token; wake-ups re-enter a FIFO ready
+    queue. Virtual time jumps to the earliest pending timer only when no
+    actor is ready — i.e. when every actor is provably waiting on
+    simulated time or on an event another actor will produce.
+    """
+
+    virtual = True
+
+    def __init__(self) -> None:
+        super().__init__()
+        self._mutex = threading.Lock()
+        self._now = 0.0
+        self._seq = itertools.count()
+        self._actors: dict[int, _Actor] = {}  # thread ident -> actor
+        self._ready: list[_Actor] = []
+        self._running: _Actor | None = None
+        self._timers: list[_Timer] = []
+        self.switches = 0        # token handoffs (scheduler cost metric)
+        self.actors_spawned = 0  # total actor registrations
+
+    # -- introspection ------------------------------------------------------
+    def now_ms(self) -> float:
+        return self._now
+
+    def _current(self) -> _Actor | None:
+        return self._actors.get(threading.get_ident())
+
+    # -- scheduling core (all called with self._mutex held) -----------------
+    def _schedule_next(self) -> None:
+        """Hand the run token to the next ready actor, advancing virtual
+        time to the earliest timer when nobody is ready."""
+        while True:
+            if self._ready:
+                nxt = self._ready.pop(0)
+                nxt.state = _RUNNING
+                self._running = nxt
+                self.switches += 1
+                nxt.cond.notify()
+                return
+            while self._timers and self._timers[0].cancelled:
+                heapq.heappop(self._timers)
+            if not self._timers:
+                # Fully event-blocked (or no actors at all): idle until an
+                # external stimulus re-kicks the scheduler.
+                self._running = None
+                return
+            timer = heapq.heappop(self._timers)
+            self._now = max(self._now, timer.deadline)
+            actor = timer.actor
+            actor.timer = None
+            actor.wake_reason = _WAKE_TIMEOUT
+            actor.state = _READY
+            self._ready.append(actor)
+
+    def _kick(self) -> None:
+        """Start the scheduler if the simulation is idle (called after an
+        external thread made an actor ready or added a timer)."""
+        if self._running is None:
+            self._schedule_next()
+
+    def _make_ready(self, actor: _Actor) -> None:
+        """Move a blocked actor to the ready queue (waker side)."""
+        if actor.timer is not None:
+            actor.timer.cancelled = True
+            actor.timer = None
+        actor.wake_reason = _WAKE_SIGNAL
+        actor.state = _READY
+        self._ready.append(actor)
+
+    def _block(self, actor: _Actor, timeout_ms: float | None) -> str:
+        """Release the run token and wait to be woken. Returns the wake
+        reason (``signal`` or ``timeout``)."""
+        actor.state = _BLOCKED
+        actor.wake_reason = None
+        if timeout_ms is not None:
+            actor.timer = _Timer(self._now + max(0.0, timeout_ms), actor)
+            heapq.heappush(self._timers, actor.timer)
+        self._schedule_next()
+        while actor.state is not _RUNNING:
+            actor.cond.wait()
+        return actor.wake_reason or _WAKE_SIGNAL
+
+    def _wait_for_token(self, actor: _Actor) -> None:
+        while actor.state is not _RUNNING:
+            actor.cond.wait()
+
+    # -- actor lifecycle ----------------------------------------------------
+    def _register_current(self) -> _Actor:
+        with self._mutex:
+            actor = _Actor(next(self._seq), self._mutex)
+            actor.state = _READY
+            self._actors[threading.get_ident()] = actor
+            self._ready.append(actor)
+            self._kick()
+            self._wait_for_token(actor)
+            return actor
+
+    def _deregister_current(self) -> None:
+        with self._mutex:
+            actor = self._actors.pop(threading.get_ident(), None)
+            if actor is None:
+                return
+            if self._running is actor:
+                self._schedule_next()
+
+    class _ActorContext:
+        def __init__(self, clock: "VirtualClock"):
+            self.clock = clock
+
+        def __enter__(self) -> None:
+            self.clock._register_current()
+
+        def __exit__(self, *exc: Any) -> None:
+            self.clock._deregister_current()
+
+    def actor(self) -> "_ActorContext":
+        return VirtualClock._ActorContext(self)
+
+    def spawn(self, fn: Callable[[], None], name: str) -> None:
+        # The actor slot enters the ready queue HERE, on the spawning
+        # thread, so scheduling order is a pure function of the event
+        # sequence — not of how quickly the OS starts (or recycles) the
+        # worker thread that will service it.
+        with self._mutex:
+            actor = _Actor(next(self._seq), self._mutex)
+            actor.state = _READY
+            self._ready.append(actor)
+            self.actors_spawned += 1
+            self._kick()
+
+        def body() -> None:
+            with self._mutex:
+                self._actors[threading.get_ident()] = actor
+                self._wait_for_token(actor)
+            try:
+                fn()
+            finally:
+                self._deregister_current()
+
+        _dispatch_to_worker(body)
+
+    # -- time ---------------------------------------------------------------
+    def sleep_ms(self, ms: float) -> None:
+        with self._mutex:
+            actor = self._current()
+            if actor is None or self._running is not actor:
+                return  # non-actor thread: virtual time is not its to spend
+            self._block(actor, ms)
+
+    def charge(self, ms: float) -> None:
+        if ms <= 0:
+            return
+        self._account(ms)
+        self.sleep_ms(ms)
+
+    # -- primitives ---------------------------------------------------------
+    def queue(self) -> "VirtualQueue":
+        return VirtualQueue(self)
+
+    def lock(self) -> "VirtualLock":
+        return VirtualLock(self)
+
+    def event(self) -> "VirtualEvent":
+        return VirtualEvent(self)
+
+    def pool(self, max_workers: int) -> "VirtualPool":
+        return VirtualPool(self, max_workers)
+
+
+class VirtualQueue:
+    """``queue.Queue``-compatible FIFO whose blocking ``get`` cooperates
+    with the virtual clock. ``timeout`` is *simulated seconds* for actor
+    threads and real seconds for non-actor threads."""
+
+    def __init__(self, clock: VirtualClock):
+        self._clock = clock
+        self._items: list[Any] = []
+        self._waiters: list[_Actor | _ExternalWaiter] = []
+
+    def put(self, item: Any) -> None:
+        clock = self._clock
+        with clock._mutex:
+            self._items.append(item)
+            if self._waiters:
+                waiter = self._waiters.pop(0)
+                if isinstance(waiter, _ExternalWaiter):
+                    waiter.signalled = True
+                    waiter.cond.notify()
+                else:
+                    clock._make_ready(waiter)
+                    clock._kick()
+
+    def get(self, timeout: float | None = None) -> Any:
+        clock = self._clock
+        with clock._mutex:
+            actor = clock._current()
+            if actor is not None and clock._running is actor:
+                deadline = (None if timeout is None
+                            else clock._now + timeout * 1e3)
+                while not self._items:
+                    remaining = (None if deadline is None
+                                 else deadline - clock._now)
+                    if remaining is not None and remaining <= 0:
+                        raise _queue.Empty
+                    self._waiters.append(actor)
+                    reason = clock._block(actor, remaining)
+                    if reason == _WAKE_TIMEOUT:
+                        if actor in self._waiters:
+                            self._waiters.remove(actor)
+                        raise _queue.Empty
+                return self._items.pop(0)
+            # Non-actor thread: real wait, real timeout.
+            deadline = (None if timeout is None
+                        else time.monotonic() + timeout)
+            while not self._items:
+                waiter = _ExternalWaiter(clock._mutex)
+                self._waiters.append(waiter)
+                remaining = (None if deadline is None
+                             else deadline - time.monotonic())
+                if remaining is not None and remaining <= 0:
+                    self._waiters.remove(waiter)
+                    raise _queue.Empty
+                if not waiter.cond.wait(remaining):
+                    if waiter in self._waiters:
+                        self._waiters.remove(waiter)
+                    if not waiter.signalled:
+                        raise _queue.Empty
+            return self._items.pop(0)
+
+    def empty(self) -> bool:
+        with self._clock._mutex:
+            return not self._items
+
+
+class VirtualLock:
+    """Transfer-lane lock held across simulated transfers. FIFO handoff:
+    ``release`` passes ownership directly to the longest-waiting thread,
+    which keeps lane-contention outcomes deterministic."""
+
+    def __init__(self, clock: VirtualClock):
+        self._clock = clock
+        self._owner: Any = None  # _Actor, _ExternalWaiter, or thread ident
+        self._waiters: list[_Actor | _ExternalWaiter] = []
+
+    def acquire(self) -> None:
+        clock = self._clock
+        with clock._mutex:
+            actor = clock._current()
+            if actor is not None and clock._running is actor:
+                if self._owner is None:
+                    self._owner = actor
+                    return
+                self._waiters.append(actor)
+                clock._block(actor, None)  # woken owning the lock
+                return
+            ident = threading.get_ident()
+            if self._owner is None:
+                self._owner = ident
+                return
+            waiter = _ExternalWaiter(clock._mutex)
+            self._waiters.append(waiter)
+            while not waiter.signalled:
+                waiter.cond.wait()
+            self._owner = ident
+
+    def release(self) -> None:
+        clock = self._clock
+        with clock._mutex:
+            if not self._waiters:
+                self._owner = None
+                return
+            waiter = self._waiters.pop(0)
+            if isinstance(waiter, _ExternalWaiter):
+                self._owner = waiter  # placeholder until the thread wakes
+                waiter.signalled = True
+                waiter.cond.notify()
+            else:
+                self._owner = waiter
+                clock._make_ready(waiter)
+                clock._kick()
+
+    def __enter__(self) -> "VirtualLock":
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        self.release()
+
+
+class VirtualEvent:
+    """``threading.Event``-compatible; ``wait`` timeout is simulated
+    seconds for actors, real seconds for non-actor threads."""
+
+    def __init__(self, clock: VirtualClock):
+        self._clock = clock
+        self._flag = False
+        self._waiters: list[_Actor | _ExternalWaiter] = []
+
+    def is_set(self) -> bool:
+        return self._flag
+
+    def set(self) -> None:
+        clock = self._clock
+        with clock._mutex:
+            self._flag = True
+            waiters, self._waiters = self._waiters, []
+            kicked = False
+            for waiter in waiters:
+                if isinstance(waiter, _ExternalWaiter):
+                    waiter.signalled = True
+                    waiter.cond.notify()
+                else:
+                    clock._make_ready(waiter)
+                    kicked = True
+            if kicked:
+                clock._kick()
+
+    def wait(self, timeout: float | None = None) -> bool:
+        clock = self._clock
+        with clock._mutex:
+            if self._flag:
+                return True
+            actor = clock._current()
+            if actor is not None and clock._running is actor:
+                self._waiters.append(actor)
+                reason = clock._block(
+                    actor, None if timeout is None else timeout * 1e3)
+                if reason == _WAKE_TIMEOUT and actor in self._waiters:
+                    self._waiters.remove(actor)
+                return self._flag
+            waiter = _ExternalWaiter(clock._mutex)
+            self._waiters.append(waiter)
+            waiter.cond.wait(timeout)
+            if waiter in self._waiters:
+                self._waiters.remove(waiter)
+            return self._flag
+
+
+class VirtualPool:
+    """Executor-runtime stand-in for ``ThreadPoolExecutor``: worker
+    threads are clock actors created lazily up to ``max_workers``, so an
+    8k-task sweep only materializes as many OS threads as are ever
+    simultaneously busy. Queued bodies do NOT hold back virtual time —
+    a full pool models the provider's concurrency limit."""
+
+    def __init__(self, clock: VirtualClock, max_workers: int):
+        self._clock = clock
+        self._max_workers = max(1, max_workers)
+        self._q = clock.queue()
+        self._state_lock = threading.Lock()
+        self._workers = 0
+        self._idle = 0
+        self._closed = False
+
+    def submit(self, fn: Callable[[], Any]) -> None:
+        with self._state_lock:
+            if self._closed:
+                raise RuntimeError("cannot schedule new futures after "
+                                   "shutdown")
+            spawn = self._idle == 0 and self._workers < self._max_workers
+            if spawn:
+                self._workers += 1
+                n = self._workers
+        self._q.put(fn)
+        if spawn:
+            self._clock.spawn(self._worker, name=f"vpool-{n}")
+
+    def _worker(self) -> None:
+        while True:
+            with self._state_lock:
+                self._idle += 1
+            item = self._q.get()
+            with self._state_lock:
+                self._idle -= 1
+            if item is None:
+                return
+            item()
+
+    def shutdown(self, wait: bool = False,
+                 cancel_futures: bool = True) -> None:
+        with self._state_lock:
+            if self._closed:
+                return
+            self._closed = True
+            n = self._workers
+        for _ in range(n):
+            self._q.put(None)
+
+
+# ---------------------------------------------------------------------------
+# Mode selection
+# ---------------------------------------------------------------------------
+
+
+def clock_for_scale(time_scale: float) -> BaseClock:
+    """``time_scale == 0`` selects the virtual discrete-event clock (the
+    default); ``time_scale > 0`` keeps the seed real-time mode for
+    cross-checks."""
+    if time_scale > 0:
+        return RealtimeClock(time_scale)
+    return VirtualClock()

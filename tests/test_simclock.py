@@ -1,0 +1,284 @@
+"""Virtual-time simulation core (PR 3): determinism, scale, primitives.
+
+The tentpole properties:
+
+- *determinism*: two identical virtual-mode runs produce bit-identical
+  ``wall_s`` / ``charged_ms`` / metrics / results — even with latency
+  jitter, cold starts, and fault injection enabled (all draws are
+  seeded, and the cooperative scheduler serializes actors in a
+  reproducible order).
+- *scale decoupling*: simulated seconds cost zero wall time, so a
+  4096-leaf tree reduction (~8k tasks, minutes of simulated time)
+  completes in seconds of wall time, and ``job_timeout_s`` means
+  *simulated* seconds (a timeout fires instantly in wall time).
+- *cross-check*: the virtual clock charges exactly what the seed
+  real-time mode charges for the same job.
+"""
+import queue
+import time
+
+import pytest
+
+from repro.core import (
+    CostModel,
+    EngineConfig,
+    FaultConfig,
+    JobError,
+    WukongEngine,
+)
+from repro.core.simclock import RealtimeClock, VirtualClock, clock_for_scale
+from repro.apps import tree_reduction_dag
+from repro.apps.tree_reduction import tree_reduction_expected
+
+
+# ---------------------------------------------------------------------------
+# Clock primitives
+# ---------------------------------------------------------------------------
+
+
+class TestVirtualClockPrimitives:
+    def test_mode_selection(self):
+        assert isinstance(clock_for_scale(0.0), VirtualClock)
+        assert isinstance(clock_for_scale(0.1), RealtimeClock)
+
+    def test_charge_outside_actor_accumulates_without_advancing(self):
+        clock = VirtualClock()
+        clock.charge(123.0)
+        assert clock.charged_ms == 123.0
+        assert clock.now_ms() == 0.0
+
+    def test_actor_charge_advances_virtual_time(self):
+        clock = VirtualClock()
+        with clock.actor():
+            clock.charge(250.0)
+            clock.charge(125.0)
+            assert clock.now_ms() == 375.0
+        assert clock.charged_ms == 375.0
+
+    def test_sleepers_wake_in_deadline_order(self):
+        clock = VirtualClock()
+        wakes = []
+
+        def sleeper(ms):
+            def body():
+                clock.sleep_ms(ms)
+                wakes.append((ms, clock.now_ms()))
+            return body
+
+        for ms in (300.0, 100.0, 200.0):
+            clock.spawn(sleeper(ms), name=f"s{ms}")
+        deadline = time.monotonic() + 5.0
+        while len(wakes) < 3 and time.monotonic() < deadline:
+            time.sleep(0.001)
+        assert wakes == [(100.0, 100.0), (200.0, 200.0), (300.0, 300.0)]
+
+    def test_queue_get_timeout_is_simulated(self):
+        clock = VirtualClock()
+        q = clock.queue()
+        with clock.actor():
+            t0 = time.perf_counter()
+            with pytest.raises(queue.Empty):
+                q.get(timeout=3600.0)  # one simulated hour...
+            real = time.perf_counter() - t0
+            assert clock.now_ms() == pytest.approx(3600e3)
+        assert real < 5.0  # ...costs (essentially) zero wall time
+
+    def test_queue_put_wakes_blocked_actor(self):
+        clock = VirtualClock()
+        q = clock.queue()
+        got = []
+
+        def consumer():
+            got.append(q.get(timeout=60.0))
+
+        clock.spawn(consumer, name="consumer")
+        with clock.actor():
+            clock.charge(5.0)  # let the consumer block first
+            q.put("payload")
+        deadline = time.monotonic() + 5.0
+        while not got and time.monotonic() < deadline:
+            time.sleep(0.001)
+        assert got == ["payload"]
+        assert clock.now_ms() < 60e3  # woken by the put, not the timeout
+
+    def test_lock_contention_charges_waiters_for_the_hold(self):
+        clock = VirtualClock()
+        lane = clock.lock()
+        spans = []
+
+        def transfer(ms):
+            def body():
+                with lane:
+                    t0 = clock.now_ms()
+                    clock.charge(ms)
+                    spans.append((t0, clock.now_ms()))
+            return body
+
+        for _ in range(3):
+            clock.spawn(transfer(100.0), name="t")
+        deadline = time.monotonic() + 5.0
+        while len(spans) < 3 and time.monotonic() < deadline:
+            time.sleep(0.001)
+        # serialized: each holder's span starts when the previous ends
+        assert spans == [(0.0, 100.0), (100.0, 200.0), (200.0, 300.0)]
+
+    def test_event_wait_timeout_and_set(self):
+        clock = VirtualClock()
+        ev = clock.event()
+        with clock.actor():
+            assert ev.wait(timeout=0.5) is False  # simulated 500 ms
+            assert clock.now_ms() == pytest.approx(500.0)
+            ev.set()
+            assert ev.wait(timeout=0.5) is True
+            assert clock.now_ms() == pytest.approx(500.0)  # no extra wait
+
+    def test_nonactor_threads_still_block_for_real(self):
+        # Unit-test usage: no actors anywhere, plain threads must not
+        # deadlock on the clock-aware primitives.
+        import threading
+
+        clock = VirtualClock()
+        q = clock.queue()
+        out = []
+        t = threading.Thread(target=lambda: out.append(q.get(timeout=5.0)))
+        t.start()
+        q.put(42)
+        t.join(timeout=5.0)
+        assert out == [42]
+
+
+# ---------------------------------------------------------------------------
+# Engine-level determinism
+# ---------------------------------------------------------------------------
+
+
+def _rich_config():
+    """Virtual-mode engine exercising every stochastic knob: latency
+    jitter, cold starts, fault injection with retry backoff."""
+    return EngineConfig(
+        cost=CostModel(invoke_sigma=0.3, warm_fraction=0.7, latency_seed=7),
+        faults=FaultConfig(task_failure_prob=0.04, max_retries=2, seed=21,
+                           retry_backoff_base_ms=1000.0),
+    )
+
+
+class TestDeterminism:
+    def test_identical_runs_bit_identical(self):
+        """Acceptance: two identical seeded virtual runs agree on
+        results, wall_s, charged_ms, AND the full metrics trace."""
+        reps = []
+        for _ in range(2):
+            dag = tree_reduction_dag(64, compute_ms=250.0,
+                                     payload_bytes=1 << 16)
+            reps.append(WukongEngine(_rich_config()).compute(dag))
+        a, b = reps
+        (ka, va), = a.results.items()
+        (kb, vb), = b.results.items()
+        assert ka == kb and va[0] == vb[0] == tree_reduction_expected(64)
+        assert a.wall_s == b.wall_s
+        assert a.charged_ms == b.charged_ms
+        assert a.kv_stats == b.kv_stats
+        assert a.executors_invoked == b.executors_invoked
+        assert a.metrics == b.metrics  # same records, same ORDER
+
+    def test_metrics_stamped_with_virtual_time(self):
+        rep = WukongEngine().compute(tree_reduction_dag(16,
+                                                        compute_ms=100.0))
+        stamps = [m["at_ms"] for m in rep.metrics]
+        assert stamps and all(s >= 0.0 for s in stamps)
+        assert max(stamps) <= rep.wall_s * 1e3 + 1e-6
+        # simulated compute is visible in the per-task breakdown
+        executed = [m for m in rep.metrics if m.get("event") == "executed"]
+        assert all(m["compute_ms"] == pytest.approx(100.0)
+                   for m in executed)
+
+    def test_latency_seed_changes_the_trace(self):
+        def run(seed):
+            cfg = EngineConfig(cost=CostModel(
+                invoke_sigma=0.3, warm_fraction=0.5, latency_seed=seed))
+            return WukongEngine(cfg).compute(
+                tree_reduction_dag(32, compute_ms=50.0))
+
+        assert run(1).charged_ms != run(2).charged_ms
+        assert run(3).charged_ms == run(3).charged_ms
+
+    def test_cold_starts_cost_more_than_warm_pool(self):
+        def run(warm):
+            cfg = EngineConfig(cost=CostModel(warm_fraction=warm))
+            return WukongEngine(cfg).compute(tree_reduction_dag(32))
+
+        assert run(0.0).charged_ms > run(1.0).charged_ms
+
+
+class TestCrossCheck:
+    def test_virtual_matches_realtime_charges(self):
+        """The virtual substrate must charge exactly what the seed
+        real-time mode charges for the same job (protocol equivalence;
+        only the passage of wall time differs)."""
+        def run(scale):
+            cfg = EngineConfig(cost=CostModel(time_scale=scale))
+            return WukongEngine(cfg).compute(
+                tree_reduction_dag(16, compute_ms=20.0))
+
+        virt = run(0.0)
+        real = run(0.001)
+        assert virt.charged_ms == pytest.approx(real.charged_ms)
+        assert virt.kv_stats == real.kv_stats
+        (_, v), = virt.results.items()
+        (_, r), = real.results.items()
+        assert v[0] == r[0]
+
+
+# ---------------------------------------------------------------------------
+# Scale: simulated seconds are free
+# ---------------------------------------------------------------------------
+
+
+class TestScale:
+    def test_job_timeout_means_simulated_seconds(self):
+        """A 10-simulated-minute timeout on a stuck job fires instantly
+        in wall time: the clock jumps straight to the deadline."""
+        cfg = EngineConfig(
+            cost=CostModel(),
+            job_timeout_s=600.0,
+            # a task that "runs" 20 simulated minutes can never finish
+            faults=FaultConfig(straggler_prob=1.0,
+                               straggler_slowdown_ms=1200e3, seed=1),
+        )
+        t0 = time.perf_counter()
+        with pytest.raises(JobError, match="timed out"):
+            WukongEngine(cfg).compute(tree_reduction_dag(4))
+        assert time.perf_counter() - t0 < 30.0
+
+    def test_4096_leaf_tree_reduction_under_wall_budget(self):
+        """Acceptance: a 4096-leaf TR (8191 tasks, ~7 simulated minutes)
+        completes correctly within a wall-time budget in virtual mode —
+        the DAG scale the 512-thread real-time cap could never reach."""
+        n = 8192  # 4096 leaf tasks
+        dag = tree_reduction_dag(n, compute_ms=500.0)
+        cfg = EngineConfig(max_concurrency=8192, job_timeout_s=3600.0)
+        t0 = time.perf_counter()
+        rep = WukongEngine(cfg).compute(dag)
+        wall = time.perf_counter() - t0
+        (_, v), = rep.results.items()
+        assert v[0] == tree_reduction_expected(n)
+        assert rep.tasks == n - 1
+        assert rep.wall_s > 10.0       # minutes of simulated time...
+        assert wall < 120.0            # ...in seconds of wall time
+
+
+class TestRetryBackoff:
+    def test_backoff_is_charged_not_slept(self):
+        base = EngineConfig(faults=FaultConfig(
+            task_failure_prob=0.04, max_retries=2, seed=21))
+        slow = EngineConfig(faults=FaultConfig(
+            task_failure_prob=0.04, max_retries=2, seed=21,
+            retry_backoff_base_ms=60e3))  # Lambda-style ~1 min waits
+        dag = tree_reduction_dag(32)
+        r0 = WukongEngine(base).compute(tree_reduction_dag(32))
+        t0 = time.perf_counter()
+        r1 = WukongEngine(slow).compute(dag)
+        assert time.perf_counter() - t0 < 30.0  # backoff cost no wall time
+        (_, v), = r1.results.items()
+        assert v[0] == tree_reduction_expected(32)
+        assert r1.charged_ms - r0.charged_ms >= 60e3 - 1.0  # >= one backoff
