@@ -102,6 +102,24 @@ def wukong_dataplane_off(scale: float = SIM_SCALE, **kw: Any) -> WukongEngine:
                                      batch_kv_round_trips=False, **kw))
 
 
+# -- stateful platform presets (fig14: warm pool / throttling / billing) ----
+
+
+def wukong_platform(scale: float = SIM_SCALE,
+                    platform: "Any | None" = None,
+                    **kw: Any) -> WukongEngine:
+    """Optimized WUKONG on the stateful platform model (repro.platform):
+    warm-container pool + concurrency throttle + billing meter. Pass a
+    ``PlatformConfig`` to set the memory / keep-alive / concurrency
+    knobs; cost-model overrides ride ``kw['cost']``."""
+    from repro.platform import PlatformConfig
+
+    c = kw.pop("cost", None) or cost(scale, cold_start_ms=250.0)
+    return WukongEngine(EngineConfig(
+        cost=c, optimize=ALL_PASSES,
+        platform=platform or PlatformConfig(), **kw))
+
+
 def parallel_invoker_optimized(scale: float = SIM_SCALE,
                                n: int = 20) -> ParallelInvokerEngine:
     """Centralized best-iteration with the DAG compiler (chain fusion
@@ -126,13 +144,16 @@ def parallel_invoker(scale: float = SIM_SCALE,
 def serverful_ec2(scale: float = SIM_SCALE) -> ServerfulEngine:
     # paper: five t2.2xlarge VMs x five workers
     return ServerfulEngine(ServerfulConfig(
-        cost=cost(scale), n_workers=25, worker_bandwidth_mbps=1000.0))
+        cost=cost(scale), n_workers=25, worker_bandwidth_mbps=1000.0,
+        n_vms=5, vm_price_per_hour_usd=0.3712))
 
 
 def serverful_laptop(scale: float = SIM_SCALE) -> ServerfulEngine:
-    # paper: two-core i5 laptop, four workers
+    # paper: two-core i5 laptop, four workers — owned hardware, so the
+    # fixed-cluster billing model charges no VM-hours
     return ServerfulEngine(ServerfulConfig(
-        cost=cost(scale), n_workers=4, worker_bandwidth_mbps=4000.0))
+        cost=cost(scale), n_workers=4, worker_bandwidth_mbps=4000.0,
+        n_vms=0, vm_price_per_hour_usd=0.0))
 
 
 def timed(engine, dag, repeats: int = 1,
@@ -162,6 +183,7 @@ def timed(engine, dag, repeats: int = 1,
         "kv_stats": rep.kv_stats,
         "charged_ms": rep.charged_ms,
         "metrics": rep.metrics,
+        "platform_stats": rep.platform_stats,
     }
 
 

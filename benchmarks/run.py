@@ -36,6 +36,9 @@ def _json_row(row: dict) -> dict:
         "kv_stats": row.get("kv_stats"),
         "tasks": row.get("tasks"),
         "executors": row.get("executors"),
+        # Provider-model counters (cold/warm starts, throttles, billed
+        # USD in pool mode; invoker cold starts in every mode).
+        "platform_stats": row.get("platform_stats"),
     }
 
 
@@ -142,6 +145,53 @@ def _virtual_mode_trajectory(smoke: bool) -> dict:
     return out
 
 
+def _check_platform_gate(rows_by_fig: dict, smoke_kwargs: dict) -> None:
+    """CI regression gate for the stateful platform model:
+
+    - *determinism*: re-running the fig14 warm/cold smoke workload must
+      reproduce the recorded run bit-identically — ``platform_stats``
+      (including billed USD), charged ms, and simulated makespan;
+    - *warm pool pays*: container reuse must strictly lower the charged
+      simulated latency relative to the all-cold (keep_alive=0) pool.
+    """
+    from benchmarks import common, fig14_platform
+
+    if common.SIM_SCALE > 0:
+        # Bit-identity is a virtual-clock property; under the real-time
+        # cross-check mode wall_s is real elapsed time and thread timing
+        # perturbs the throttle/pool counters.
+        print("# platform gate skipped (real-time mode)", file=sys.stderr)
+        return
+    rows = {r["label"]: r for r in rows_by_fig.get("fig14", [])}
+    warm, cold = rows.get("warm_pool"), rows.get("cold_pool")
+    if warm is None or cold is None:
+        return
+    warm2, cold2 = fig14_platform.warm_cold_pair(
+        n=smoke_kwargs["n"], compute_ms=smoke_kwargs["compute_ms"],
+        lanes=smoke_kwargs["pool_lanes"])
+    for first, second in ((warm, warm2), (cold, cold2)):
+        for field in ("platform_stats", "charged_ms", "wall_s"):
+            if first[field] != second[field]:
+                raise SystemExit(
+                    f"platform regression: {first['label']} not "
+                    f"deterministic across runs — {field} "
+                    f"{first[field]!r} != {second[field]!r}")
+    if not warm["charged_ms"] < cold["charged_ms"]:
+        raise SystemExit(
+            f"platform regression: warm pool charged "
+            f"{warm['charged_ms']:.1f}ms, not strictly below the "
+            f"all-cold pool's {cold['charged_ms']:.1f}ms")
+    ps = warm["platform_stats"]
+    if not ps["warm_reuses"] > 0:
+        raise SystemExit("platform regression: warm pool saw no reuse")
+    saved = (1 - warm["charged_ms"] / cold["charged_ms"]) * 100
+    print(f"# platform gate OK: deterministic billed "
+          f"${ps['billed_usd']:.6f}; warm pool charged "
+          f"{warm['charged_ms']:.1f}ms vs cold {cold['charged_ms']:.1f}ms "
+          f"({saved:.1f}% saved, {ps['warm_reuses']} reuses)",
+          file=sys.stderr)
+
+
 def _check_dataplane_gate(rows_by_fig: dict) -> None:
     """CI regression gate: on the smoke workload the optimized data
     plane (striping + batched round trips) must not be charged more
@@ -183,6 +233,7 @@ def main() -> None:
         fig11_svc,
         fig12_factor_analysis,
         fig13_task_cdf,
+        fig14_platform,
     )
     from benchmarks import common
 
@@ -218,6 +269,15 @@ def main() -> None:
                   dict(n=32), dict(n=128), dict(n=512)),
         "fig13": (fig13_task_cdf.run,
                   dict(n=256), dict(n=1024), dict(n=2048)),
+        "fig14": (fig14_platform.run,
+                  dict(n=32, compute_ms=5.0, memory_sweep=(896, 1792),
+                       pool_cap=4, pool_lanes=4, fanout_n=64,
+                       fanout_burst=8, fanout_cap=16),
+                  dict(n=128, compute_ms=100.0,
+                       memory_sweep=(1024, 1792, 3584), pool_cap=16,
+                       pool_lanes=8, fanout_n=512, fanout_burst=64,
+                       fanout_cap=128),
+                  dict()),
     }
     mode = 0 if args.smoke else (1 if args.quick else 2)
     only = set(args.only.split(",")) if args.only else None
@@ -254,6 +314,7 @@ def main() -> None:
 
     if args.smoke:
         _check_dataplane_gate(rows_by_fig)
+        _check_platform_gate(rows_by_fig, figs["fig14"][1])
 
 
 if __name__ == "__main__":

@@ -6,7 +6,13 @@ import operator
 
 import numpy as np
 
-from repro.core import ENGINES, GraphBuilder, WukongEngine
+from repro.core import (
+    ENGINES,
+    EngineConfig,
+    GraphBuilder,
+    PlatformConfig,
+    WukongEngine,
+)
 
 
 def main() -> None:
@@ -38,6 +44,17 @@ def main() -> None:
     print(f"optimized: {opt.results}  "
           f"(executors={opt.executors_invoked}, "
           f"kv puts={opt.kv_stats['puts']}, passes={[s.name for s in opt.optimizer]})")
+
+    # --- 5. on the stateful platform model: what did the job COST? ------
+    billed = WukongEngine(EngineConfig(
+        platform=PlatformConfig(memory_mb=1792, keep_alive_s=600.0)
+    )).compute(dag)
+    ps = billed.platform_stats
+    print(f"platform: billed ${ps['billed_usd']:.9f} "
+          f"({ps['billed_requests']} requests, "
+          f"{ps['billed_gb_s']:.4f} GB-s; "
+          f"cold={ps['cold_starts']}, warm={ps['warm_reuses']}, "
+          f"peak concurrency={ps['peak_concurrency']})")
 
 
 if __name__ == "__main__":

@@ -32,6 +32,18 @@ from repro.core.simclock import (
     simulated_compute,
 )
 
+
+def __getattr__(name):
+    # Lazy re-export of the platform surface (PEP 562): an eager import
+    # would close the repro.platform -> repro.core.kvstore ->
+    # repro.core.__init__ cycle and break `import repro.platform` in a
+    # fresh process.
+    if name in ("FaaSPlatform", "PlatformConfig"):
+        import repro.platform
+
+        return getattr(repro.platform, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
 __all__ = [
     "DAG", "Task", "TaskRef", "GraphBuilder", "delayed_graph",
     "ENGINES", "EngineConfig", "CentralizedConfig", "ServerfulConfig",
@@ -42,4 +54,5 @@ __all__ = [
     "OptimizeConfig", "CompiledDAG", "PassStats", "compile_dag",
     "ALL_PASSES", "NO_PASSES",
     "VirtualClock", "RealtimeClock", "clock_for_scale", "simulated_compute",
+    "PlatformConfig", "FaaSPlatform",
 ]

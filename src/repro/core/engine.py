@@ -33,7 +33,7 @@ from __future__ import annotations
 import dataclasses
 import queue
 import threading
-from typing import Any
+from typing import TYPE_CHECKING, Any
 
 from repro.core.dag import DAG, TaskRef
 from repro.core.executor import (
@@ -48,6 +48,22 @@ from repro.core.kvstore import CostModel, ShardedKVStore, sizeof
 from repro.core.optimize import OptimizeConfig, PassStats, ensure_compiled
 from repro.core.schedule import generate_static_schedules
 from repro.core.simclock import task_clock
+
+if TYPE_CHECKING:  # import cycle: repro.platform imports repro.core
+    from repro.platform import FaaSPlatform, PlatformConfig
+
+
+def _make_platform(config: "PlatformConfig | None", cost: CostModel,
+                   clock) -> "FaaSPlatform | None":
+    """Instantiate the stateful platform lazily: a module-level import
+    of repro.platform here would close an import cycle (repro.platform
+    -> repro.core.kvstore -> repro.core.__init__ -> engine) and crash
+    any process that imports repro.platform first."""
+    if config is None:
+        return None
+    from repro.platform import FaaSPlatform
+
+    return FaaSPlatform(config, cost, clock)
 
 
 class JobError(RuntimeError):
@@ -83,6 +99,11 @@ class EngineConfig:
     # None = run the graph verbatim (the seed behavior). Each pass is
     # independently switchable for §V-B-style factor ablations.
     optimize: OptimizeConfig | None = None
+    # Stateful FaaS platform model (repro.platform): warm-container pool
+    # with keep-alive expiry, account concurrency throttling with burst
+    # ramp, and a billing meter. None = the legacy memoryless
+    # ``warm_fraction`` draw (kept for cross-checks).
+    platform: PlatformConfig | None = None
 
 
 @dataclasses.dataclass
@@ -95,6 +116,26 @@ class JobReport:
     metrics: list[dict[str, Any]]
     charged_ms: float
     optimizer: tuple[PassStats, ...] = ()  # compiler pass report
+    # Provider-model counters: cold/warm starts, throttle events, peak
+    # concurrency, billed USD (pool mode); invoker cold-start counts in
+    # every mode (the InvokerPool counter was previously dropped).
+    platform_stats: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+def _platform_stats(platform: "FaaSPlatform | None",
+                    pools: "list[InvokerPool]") -> dict[str, Any]:
+    """The JobReport provider-model block. With the stateful platform:
+    its full snapshot (pool / throttle / billing counters). Without it:
+    the legacy stochastic-draw counters — surfacing the per-pool
+    ``cold_starts`` tally that was previously incremented but never
+    reported."""
+    if platform is not None:
+        stats = platform.snapshot()
+    else:
+        stats = {"mode": "legacy",
+                 "cold_starts": sum(p.cold_starts for p in pools)}
+    stats["invocations"] = sum(p.invocations for p in pools)
+    return stats
 
 
 class _ResultWaiter:
@@ -171,11 +212,16 @@ class WukongEngine:
             heartbeats = HeartbeatRegistry()
             faults = FaultInjector(cfg.faults)
             pool = clock.pool(cfg.max_concurrency)
+            # One platform instance per job: initial and proxy invokers
+            # share the account concurrency cap and the container pool.
+            platform = _make_platform(cfg.platform, cfg.cost, clock)
             initial_invokers = InvokerPool(
-                cfg.num_initial_invokers, cfg.cost, clock, pool, name="init"
+                cfg.num_initial_invokers, cfg.cost, clock, pool, name="init",
+                platform=platform,
             )
             proxy_invokers = InvokerPool(
-                cfg.num_proxy_invokers, cfg.cost, clock, pool, name="proxy"
+                cfg.num_proxy_invokers, cfg.cost, clock, pool, name="proxy",
+                platform=platform,
             )
             proxy = FanoutProxy(kv, proxy_invokers) if cfg.use_proxy else None
 
@@ -206,6 +252,8 @@ class WukongEngine:
                 inline_fanout_args=cfg.inline_fanout_args,
                 coalesce_batch=getattr(dag, "coalesce_batch", 0),
                 batch_kv_round_trips=cfg.batch_kv_round_trips,
+                compute_clock=(platform.compute_clock(clock)
+                               if platform is not None else None),
             )
 
             waiter = _ResultWaiter(kv, dag.roots)
@@ -247,6 +295,8 @@ class WukongEngine:
                 metrics=list(metrics.records),
                 charged_ms=clock.charged_ms,
                 optimizer=getattr(dag, "pass_stats", ()),
+                platform_stats=_platform_stats(
+                    platform, [initial_invokers, proxy_invokers]),
             )
         return report
 
@@ -308,6 +358,8 @@ class CentralizedConfig:
     # DAG compiler pipeline (chain fusion shrinks the one-Lambda-per-task
     # graph; the executor-level passes are no-ops here). None = verbatim.
     optimize: OptimizeConfig | None = None
+    # Stateful FaaS platform model; None = legacy stochastic draw.
+    platform: PlatformConfig | None = None
 
 
 class _CentralizedEngine:
@@ -331,7 +383,11 @@ class _CentralizedEngine:
         with clock.actor():
             metrics = TaskMetrics(clock)
             pool = clock.pool(cfg.max_concurrency)
-            invokers = InvokerPool(cfg.num_invokers, cfg.cost, clock, pool)
+            platform = _make_platform(cfg.platform, cfg.cost, clock)
+            invokers = InvokerPool(cfg.num_invokers, cfg.cost, clock, pool,
+                                   platform=platform)
+            compute_clock = (platform.compute_clock(clock)
+                             if platform is not None else clock)
             done_q = clock.queue()
             inflight = [0]
             inflight_lock = threading.Lock()
@@ -367,7 +423,7 @@ class _CentralizedEngine:
                                   for k, v in task.kwargs.items()}
                         read_ms = clock.now_ms() - t0
                         t0 = clock.now_ms()
-                        with task_clock(clock):
+                        with task_clock(compute_clock):
                             out = task.fn(*args, **kwargs)
                         compute_ms = clock.now_ms() - t0
                         t0 = clock.now_ms()
@@ -426,6 +482,7 @@ class _CentralizedEngine:
                 metrics=list(metrics.records),
                 charged_ms=clock.charged_ms,
                 optimizer=getattr(dag, "pass_stats", ()),
+                platform_stats=_platform_stats(platform, [invokers]),
             )
         return report
 
@@ -473,6 +530,12 @@ class ServerfulConfig:
     worker_bandwidth_mbps: float = 1000.0  # direct worker<->worker TCP
     job_timeout_s: float = 600.0   # simulated s under VirtualClock
     optimize: OptimizeConfig | None = None  # DAG compiler (chain fusion)
+    # Fixed-cluster billing (the serverless counterpart bills GB-seconds
+    # through repro.platform): the cluster costs VM-hours for the job's
+    # simulated makespan whether its workers are busy or idle — the
+    # pay-per-allocation vs pay-per-use comparison of fig14.
+    n_vms: int = 5                 # paper: five t2.2xlarge VMs
+    vm_price_per_hour_usd: float = 0.3712  # t2.2xlarge on-demand
 
 
 class ServerfulEngine:
@@ -592,6 +655,17 @@ class ServerfulEngine:
                 executors_invoked=0, kv_stats=kv.stats.snapshot(),
                 metrics=list(metrics.records), charged_ms=clock.charged_ms,
                 optimizer=getattr(dag, "pass_stats", ()),
+                platform_stats={
+                    "mode": "serverful",
+                    "n_vms": cfg.n_vms,
+                    "vm_price_per_hour_usd": cfg.vm_price_per_hour_usd,
+                    # The cluster is billed for the makespan regardless of
+                    # utilization — allocation-based, not use-based.
+                    "billed_usd": cfg.n_vms * cfg.vm_price_per_hour_usd
+                    * wall / 3600.0,
+                    "cold_starts": 0,
+                    "invocations": 0,
+                },
             )
         return report
 

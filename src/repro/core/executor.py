@@ -86,6 +86,7 @@ class ExecutorContext:
         executed_counter: list[int] | None = None,
         coalesce_batch: int = 0,
         batch_kv_round_trips: bool = True,
+        compute_clock: Any = None,
     ):
         self.dag = dag
         self.kv = kv
@@ -100,6 +101,10 @@ class ExecutorContext:
         # Gather task inputs with one pipelined mget per task (one
         # kv_base_ms per shard batch) instead of one get per key.
         self.batch_kv_round_trips = batch_kv_round_trips
+        # Clock installed around task-function calls. The platform model
+        # passes a memory-scaled proxy here (CPU share proportional to
+        # memory size); None = the engine clock unscaled.
+        self.compute_clock = compute_clock or kv.clock
         self._id_lock = threading.Lock()
         self._next_id = 0
 
@@ -345,7 +350,7 @@ class TaskExecutor:
             # function so workload-declared compute (simulated_compute /
             # per-flop costs) is charged as simulated time.
             t0 = clock.now_ms()
-            with task_clock(clock):
+            with task_clock(self.ctx.compute_clock):
                 out = dag.tasks[current].fn(*args, **kwargs)
             compute_ms = clock.now_ms() - t0
             self.cache[current] = out

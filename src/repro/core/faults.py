@@ -26,6 +26,17 @@ class SimulatedTaskFailure(RuntimeError):
     """Injected Lambda execution failure."""
 
 
+def exponential_backoff_ms(base_ms: float, attempt: int,
+                           cap_ms: float = float("inf")) -> float:
+    """Charged exponential retry delay: attempt ``k`` waits
+    ``base * 2**k`` simulated ms, capped. Shared by the Lambda-retry
+    path below and the platform model's 429-throttle retries, so both
+    retry classes follow one schedule."""
+    if base_ms <= 0:
+        return 0.0
+    return min(cap_ms, base_ms * (2.0 ** attempt))
+
+
 @dataclasses.dataclass(frozen=True)
 class FaultConfig:
     task_failure_prob: float = 0.0   # per task attempt
@@ -51,10 +62,8 @@ class FaultInjector:
         """Simulated delay charged before respawning retry ``attempt+1``
         (charged on the engine clock, so under the virtual clock it
         advances simulated time without wall-time cost)."""
-        base = self.config.retry_backoff_base_ms
-        if base <= 0:
-            return 0.0
-        return base * (2.0 ** attempt)
+        return exponential_backoff_ms(self.config.retry_backoff_base_ms,
+                                      attempt)
 
     def _rng(self, task_key: str, attempt: int) -> random.Random:
         # Stable across processes: tuple.__hash__ mixes in the

@@ -13,11 +13,22 @@ calls concurrently:
 
 Each invoker lane charges the invocation latency serially per call; P
 lanes give P× invocation throughput — the (near-)linear speedup of
-§III-C. Latency per call is drawn from ``CostModel.invoke_draw``: a
-seeded lognormal jitter on ``invoke_ms`` plus a cold start with
-probability ``1 - warm_fraction`` — a *distribution*, not a constant,
-once those knobs are set, and reproducible because draws are keyed on
-the invocation index (which the virtual clock makes deterministic).
+§III-C.
+
+Two provider models decide cold starts:
+
+- *legacy* (``platform is None``): latency per call is drawn from
+  ``CostModel.invoke_draw`` — seeded lognormal jitter on ``invoke_ms``
+  plus a cold start with probability ``1 - warm_fraction``. Memoryless,
+  kept for cross-checks.
+- *stateful* (``platform`` set): the lane first reserves an account
+  concurrency slot — invocations beyond the (burst-ramped) limit are
+  throttled 429-style and retried with charged exponential backoff —
+  then asks the warm-container pool for a container: a warm hit skips
+  the cold start entirely, a miss provisions cold and pays
+  ``cold_start_ms``. The executor body is wrapped so its simulated
+  execution time is billed (per-request + GB-seconds) and the container
+  returns to the pool, warm, when the body finishes.
 
 All blocking (work queues, lane threads) goes through the engine clock's
 primitives, so under the virtual clock an idle invoker lane costs zero
@@ -26,19 +37,22 @@ wall time and never holds back virtual-time advancement.
 from __future__ import annotations
 
 import threading
-from typing import Any, Callable
+from typing import TYPE_CHECKING, Any, Callable
 
 from repro.core.kvstore import CostModel
 from repro.core.simclock import BaseClock
+
+if TYPE_CHECKING:  # import cycle: repro.platform imports repro.core
+    from repro.platform import FaaSPlatform
 
 
 class InvokerPool:
     """N invoker lanes; each lane issues invocations serially.
 
     ``submit`` enqueues an invocation request; a free lane picks it up,
-    charges the invocation API latency (jitter + cold-start drawn from
-    the cost model's seeded distribution), then hands the executor body
-    to the runtime pool.
+    charges the invocation API latency (jitter + cold start, decided by
+    the legacy seeded draw or by the stateful platform), then hands the
+    executor body to the runtime pool.
     """
 
     def __init__(
@@ -48,10 +62,14 @@ class InvokerPool:
         clock: BaseClock,
         runtime_pool: Any,
         name: str = "invoker",
+        platform: "FaaSPlatform | None" = None,
+        function: str = "executor",
     ):
         self.cost = cost
         self.clock = clock
         self.runtime_pool = runtime_pool
+        self.platform = platform
+        self.function = function
         self._q = clock.queue()
         self.invocations = 0
         self.cold_starts = 0
@@ -60,6 +78,53 @@ class InvokerPool:
         self._n_lanes = max(1, n_invokers)
         for i in range(self._n_lanes):
             clock.spawn(self._lane, name=f"{name}-{i}")
+
+    def _invoke_legacy(self, body: Callable[[], Any],
+                       extra_ms: float, index: int) -> bool:
+        invoke_ms, cold = self.cost.invoke_draw(index)
+        if cold:
+            with self._lock:
+                self.cold_starts += 1
+        # Invocation API latency is paid serially per lane.
+        self.clock.charge(invoke_ms + extra_ms)
+        try:
+            self.runtime_pool.submit(body)
+        except RuntimeError:
+            # Runtime already shut down: the job has resolved; late
+            # (retry/speculative) invocations are safe to drop.
+            return False
+        return True
+
+    def _invoke_platform(self, body: Callable[[], Any],
+                         extra_ms: float, index: int) -> bool:
+        platform = self.platform
+        assert platform is not None
+        # Account concurrency: beyond the (burst-ramped) cap the invoke
+        # API answers 429; the lane retries with charged exponential
+        # backoff, which delays every invocation queued behind it —
+        # exactly how SDK-side throttling backs pressure up the client.
+        attempt = 0
+        while not platform.try_reserve():
+            self.clock.charge(platform.backoff_ms(attempt))
+            attempt += 1
+        # The invoke API round trip precedes container assignment (as on
+        # the real platform), so a container released while this call is
+        # in flight is warm for it; the cold-start provisioning delay is
+        # then paid only when the pool misses.
+        self.clock.charge(self.cost.invoke_jitter_ms(index) + extra_ms)
+        cid, cold = platform.acquire(self.function)
+        if cold:
+            with self._lock:
+                self.cold_starts += 1
+            self.clock.charge(self.cost.cold_start_ms)
+        try:
+            self.runtime_pool.submit(platform.wrap(self.function, cid, body))
+        except RuntimeError:
+            # Job resolved while this lane was mid-invoke: the body will
+            # never run, so hand the slot and container straight back.
+            platform.cancel(self.function, cid)
+            return False
+        return True
 
     def _lane(self) -> None:
         while True:
@@ -70,17 +135,11 @@ class InvokerPool:
             with self._lock:
                 self.invocations += 1
                 index = self.invocations
-            invoke_ms, cold = self.cost.invoke_draw(index)
-            if cold:
-                with self._lock:
-                    self.cold_starts += 1
-            # Invocation API latency is paid serially per lane.
-            self.clock.charge(invoke_ms + extra_ms)
-            try:
-                self.runtime_pool.submit(body)
-            except RuntimeError:
-                # Runtime already shut down: the job has resolved; late
-                # (retry/speculative) invocations are safe to drop.
+            if self.platform is None:
+                ok = self._invoke_legacy(body, extra_ms, index)
+            else:
+                ok = self._invoke_platform(body, extra_ms, index)
+            if not ok:
                 return
 
     def submit(self, body: Callable[[], Any], extra_ms: float = 0.0) -> None:

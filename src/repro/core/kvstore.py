@@ -143,6 +143,22 @@ class CostModel:
             ms += self.cold_start_ms
         return ms, cold
 
+    def invoke_jitter_ms(self, index: int) -> float:
+        """Jitter-only invocation latency for invocation ``index`` —
+        the ``invoke_draw`` lognormal component WITHOUT the stochastic
+        cold-start term. The stateful platform model (repro.platform)
+        uses this: whether invocation ``index`` is cold is decided by
+        the warm-container pool's state, not a coin flip, and the
+        cold-start delay is added by the platform when the pool misses.
+        Same (latency_seed, index) keying as ``invoke_draw`` so the
+        jitter component matches between the two modes."""
+        ms = self.invoke_ms
+        if self.invoke_sigma <= 0:
+            return ms
+        token = f"{self.latency_seed}|invoke|{index}".encode()
+        rng = random.Random(zlib.crc32(token))
+        return ms * rng.lognormvariate(0.0, self.invoke_sigma)
+
 
 @dataclasses.dataclass
 class KVStats:

@@ -52,6 +52,7 @@ __all__ = [
     "BaseClock",
     "RealtimeClock",
     "VirtualClock",
+    "charge_meter",
     "clock_for_scale",
     "simulated_compute",
     "task_clock",
@@ -92,6 +93,37 @@ def simulated_compute(ms: float) -> None:
     clock = getattr(_task_clock, "clock", None)
     if clock is not None and ms > 0:
         clock.charge(ms)
+
+
+# ---------------------------------------------------------------------------
+# Per-thread charge metering (billing).
+#
+# The platform model bills an invocation the simulated time its thread
+# *charges* while running the function body — not a wall-clock delta —
+# because charge amounts are identical in both clock modes (the virtual
+# clock advances them, the real-time clock sleeps them scaled), which
+# makes billed cost bit-identical across modes. The tap lives here so the
+# platform layer never has to patch clock internals.
+# ---------------------------------------------------------------------------
+
+_charge_tap = threading.local()
+
+
+class charge_meter:
+    """Context manager accumulating this thread's clock charges into
+    ``acc[0]`` (a single-element list). Nesting restores the previous
+    accumulator on exit; charges while nested land in the innermost."""
+
+    def __init__(self, acc: "list[float]"):
+        self.acc = acc
+
+    def __enter__(self) -> "list[float]":
+        self._prev = getattr(_charge_tap, "acc", None)
+        _charge_tap.acc = self.acc
+        return self.acc
+
+    def __exit__(self, *exc: Any) -> None:
+        _charge_tap.acc = self._prev
 
 
 # ---------------------------------------------------------------------------
@@ -158,6 +190,9 @@ class BaseClock:
     def _account(self, ms: float) -> None:
         with self._charge_lock:
             self.charged_ms += ms
+        acc = getattr(_charge_tap, "acc", None)
+        if acc is not None:
+            acc[0] += ms
 
     # subclass API ----------------------------------------------------------
     def charge(self, ms: float) -> None:  # bill + advance simulated time

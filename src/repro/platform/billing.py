@@ -1,0 +1,51 @@
+"""Billing meter: per-request fees plus GB-seconds of billed duration.
+
+An invocation's billed duration is the simulated time its container
+spends executing the function body — measured as the sum of simulated-
+latency charges made by the invocation's thread (``charge_meter`` in
+repro.core.simclock), NOT as a wall-clock delta. Charge sums are
+identical in virtual and real-time clock modes (both modes charge the
+same simulated amounts), so a job's billed cost is *bit-identical
+across clock modes* — the cross-check tests rely on this. Like AWS,
+the cold-start provisioning delay and the invoke API latency are not
+billed as duration.
+
+The snapshot sums per-invocation GB-seconds in sorted order so the
+total is independent of the (thread-racy, in real-time mode) order in
+which invocations complete.
+"""
+from __future__ import annotations
+
+import threading
+
+from repro.platform.config import PlatformConfig
+
+
+class BillingMeter:
+    def __init__(self, config: PlatformConfig):
+        self.config = config
+        self._lock = threading.Lock()
+        self._billed_ms: list[float] = []  # one entry per invocation
+
+    def add_invocation(self, duration_ms: float) -> float:
+        """Record one finished invocation; returns its billed ms."""
+        billed = self.config.billed_ms(duration_ms)
+        with self._lock:
+            self._billed_ms.append(billed)
+        return billed
+
+    def snapshot(self) -> dict[str, float]:
+        cfg = self.config
+        with self._lock:
+            billed = sorted(self._billed_ms)
+        total_ms = sum(billed)
+        gb_s = sum(cfg.gb_s(ms) for ms in billed)
+        requests = len(billed)
+        usd = (requests * cfg.price_per_request_usd
+               + gb_s * cfg.price_per_gb_s_usd)
+        return {
+            "billed_requests": requests,
+            "billed_duration_ms": total_ms,
+            "billed_gb_s": gb_s,
+            "billed_usd": usd,
+        }

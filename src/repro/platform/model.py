@@ -1,0 +1,132 @@
+"""FaaSPlatform: the stateful platform facade the invocation path uses.
+
+Sits between the invoker lanes and the engine clock and combines the
+three sub-models:
+
+- ``ContainerPool``       — warm reuse vs cold provisioning, keep-alive
+                            expiry on the engine clock;
+- ``ConcurrencyThrottle`` — account cap with burst ramp, 429s retried
+                            by the invoker lane with charged backoff;
+- ``BillingMeter``        — per-request + GB-second charging of each
+                            invocation's simulated execution time.
+
+The invoker lane drives the protocol per invocation:
+
+    while not platform.try_reserve():       # 429 + charged backoff
+        clock.charge(platform.backoff_ms(attempt)); attempt += 1
+    clock.charge(jittered invoke_ms)        # invoke API round trip
+    cid, cold = platform.acquire(fn)        # pool decides cold/warm
+    if cold: clock.charge(cold_start_ms)    # provisioning delay
+    runtime_pool.submit(platform.wrap(fn, cid, body))
+
+``wrap`` meters the body's simulated charges as billed duration and
+releases the container + concurrency slot when the body finishes.
+
+``compute_clock`` scales declared task compute by the memory knob
+(CPU share is proportional to memory), which is what makes the
+memory sweep a genuine cost-vs-latency trade-off.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+from repro.core.kvstore import CostModel
+from repro.core.simclock import BaseClock, charge_meter
+
+from repro.platform.billing import BillingMeter
+from repro.platform.config import PlatformConfig
+from repro.platform.pool import ContainerPool
+from repro.platform.throttle import ConcurrencyThrottle
+
+DEFAULT_FUNCTION = "executor"
+
+
+class ComputeScaledClock:
+    """Clock proxy multiplying charges by the memory-derived compute
+    scale. Installed as the *task* clock around task-function calls, so
+    workload-declared compute (``simulated_compute`` / per-flop costs)
+    runs slower on smaller containers; engine-side latencies (KV,
+    invoke) are unaffected."""
+
+    def __init__(self, clock: BaseClock, scale: float):
+        self._clock = clock
+        self._scale = scale
+
+    def charge(self, ms: float) -> None:
+        self._clock.charge(ms * self._scale)
+
+    def __getattr__(self, name: str) -> Any:
+        return getattr(self._clock, name)
+
+
+class FaaSPlatform:
+    """One platform instance per job: every invoker pool of the job
+    (initial + proxy invokers) shares it, so the concurrency cap is
+    account-wide and the container pool is function-wide."""
+
+    def __init__(self, config: PlatformConfig, cost: CostModel,
+                 clock: BaseClock):
+        self.config = config
+        self.cost = cost
+        self.clock = clock
+        self.pool = ContainerPool(config, clock)
+        self.throttle = ConcurrencyThrottle(config, clock)
+        self.meter = BillingMeter(config)
+        if config.prewarm > 0:
+            self.pool.prewarm(DEFAULT_FUNCTION, config.prewarm)
+
+    # -- invocation protocol (driven by the invoker lane) -------------------
+    def try_reserve(self) -> bool:
+        return self.throttle.try_reserve()
+
+    def backoff_ms(self, attempt: int) -> float:
+        return self.throttle.backoff_ms(attempt)
+
+    def acquire(self, function: str = DEFAULT_FUNCTION) -> "tuple[int, bool]":
+        return self.pool.acquire(function)
+
+    def wrap(self, function: str, container_id: int,
+             body: Callable[[], None]) -> Callable[[], None]:
+        """Wrap an executor body: meter its simulated charges as billed
+        duration, then return the container to the warm pool and free
+        the concurrency slot."""
+
+        def invocation() -> None:
+            acc = [0.0]
+            try:
+                with charge_meter(acc):
+                    body()
+            finally:
+                self.meter.add_invocation(acc[0])
+                self.pool.release(function, container_id)
+                self.throttle.release()
+
+        return invocation
+
+    def cancel(self, function: str, container_id: int) -> None:
+        """Undo an acquire whose body never ran (runtime pool already
+        shut down): free the slot, return the container unbilled."""
+        self.pool.release(function, container_id)
+        self.throttle.release()
+
+    # -- compute scaling ----------------------------------------------------
+    def compute_clock(self, clock: BaseClock) -> Any:
+        scale = self.config.compute_scale
+        if scale == 1.0:
+            return clock
+        return ComputeScaledClock(clock, scale)
+
+    # -- reporting ----------------------------------------------------------
+    def snapshot(self) -> dict[str, Any]:
+        out: dict[str, Any] = {
+            "mode": "pool",
+            "memory_mb": self.config.memory_mb,
+            "keep_alive_s": self.config.keep_alive_s,
+            "cold_starts": self.pool.cold_starts,
+            "warm_reuses": self.pool.warm_reuses,
+            "containers_expired": self.pool.expired,
+            "throttle_events": self.throttle.throttle_events,
+            "peak_concurrency": self.throttle.peak_concurrency,
+        }
+        out.update(self.meter.snapshot())
+        return out

@@ -1,0 +1,84 @@
+"""Warm-container pool: the platform's container-reuse state machine.
+
+An invocation of function F either reuses an idle warm container of F
+(no cold start) or provisions a cold one. A container released by a
+finishing invocation parks in the idle pool and expires ``keep_alive_s``
+simulated seconds later — expiry is evaluated lazily against the engine
+clock on the next acquire, so no reaper actor is needed and the pool
+stays deterministic under the virtual clock.
+
+Reuse is LIFO (most-recently-released container first), matching
+observed FaaS behavior: a steady trickle of traffic keeps one hot
+container alive while the rest of the fleet ages out.
+"""
+from __future__ import annotations
+
+import threading
+
+from repro.core.simclock import BaseClock
+
+from repro.platform.config import PlatformConfig
+
+
+class ContainerPool:
+    """Per-function idle-container stacks keyed on the engine clock."""
+
+    def __init__(self, config: PlatformConfig, clock: BaseClock):
+        self.config = config
+        self.clock = clock
+        self._lock = threading.Lock()
+        # function -> stack of (expiry_deadline_ms, container_id); LIFO
+        # reuse means the top of the stack has the latest expiry, so
+        # expired containers accumulate at the bottom.
+        self._idle: dict[str, list[tuple[float, int]]] = {}
+        self._next_id = 0
+        self.cold_starts = 0
+        self.warm_reuses = 0
+        self.expired = 0
+
+    def prewarm(self, function: str, n: int) -> None:
+        """Provision ``n`` warm containers at the current clock time
+        (the paper's §V-A pool warming). Prewarmed containers age out on
+        the same keep-alive timer as any other idle container."""
+        if n <= 0:
+            return
+        expiry = self.clock.now_ms() + self.config.keep_alive_s * 1e3
+        with self._lock:
+            stack = self._idle.setdefault(function, [])
+            for _ in range(n):
+                self._next_id += 1
+                stack.append((expiry, self._next_id))
+
+    def acquire(self, function: str) -> "tuple[int, bool]":
+        """Assign a container for one invocation of ``function``.
+        Returns ``(container_id, was_cold)``."""
+        now = self.clock.now_ms()
+        with self._lock:
+            stack = self._idle.get(function)
+            if stack:
+                # Reap from the bottom: oldest releases expire first.
+                while stack and stack[0][0] <= now:
+                    stack.pop(0)
+                    self.expired += 1
+            if stack:
+                _, cid = stack.pop()
+                self.warm_reuses += 1
+                return cid, False
+            self._next_id += 1
+            self.cold_starts += 1
+            return self._next_id, True
+
+    def release(self, function: str, container_id: int) -> None:
+        """Return a container to the idle pool; it stays warm for
+        ``keep_alive_s`` simulated seconds."""
+        if self.config.keep_alive_s <= 0:
+            return  # immediately reclaimed: every invocation is cold
+        expiry = self.clock.now_ms() + self.config.keep_alive_s * 1e3
+        with self._lock:
+            self._idle.setdefault(function, []).append((expiry, container_id))
+
+    def idle_count(self, function: str) -> int:
+        now = self.clock.now_ms()
+        with self._lock:
+            stack = self._idle.get(function, [])
+            return sum(1 for expiry, _ in stack if expiry > now)

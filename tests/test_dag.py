@@ -1,7 +1,13 @@
 """DAG structure + static schedule generation (paper §IV-B)."""
 import operator
+import random
 
 import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property tests skip without the dev extra
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import DAG, GraphBuilder, delayed_graph
 from repro.core.dag import CycleError, Task, TaskRef
@@ -89,3 +95,94 @@ class TestStaticSchedules:
         ss = generate_static_schedules(dag)
         for s in ss.schedules.values():
             assert s.code_size_bytes > 0
+
+
+# ---------------------------------------------------------------------------
+# Property tests: structural invariants on random DAGs
+# ---------------------------------------------------------------------------
+
+
+def _sum_plus_one(*xs):
+    return sum(xs) + 1
+
+
+def _random_spec(seed: int, n: int) -> "list[tuple[str, list[int]]]":
+    """Random acyclic wiring: node i may only read nodes < i, so every
+    generated graph is a DAG by construction."""
+    rng = random.Random(seed)
+    spec = []
+    for i in range(n):
+        k = rng.randint(0, min(3, i))
+        parents = sorted(rng.sample(range(i), k)) if k else []
+        spec.append((f"n{i}", parents))
+    return spec
+
+
+def _dag_from_dsk(spec) -> DAG:
+    dsk = {}
+    for i, (key, parents) in enumerate(spec):
+        if parents:
+            dsk[key] = (_sum_plus_one, *[f"n{p}" for p in parents])
+        else:
+            dsk[key] = i  # literal leaf
+    return DAG.from_dsk(dsk)
+
+
+def _dag_from_builder(spec) -> DAG:
+    g = GraphBuilder()
+    for i, (key, parents) in enumerate(spec):
+        if parents:
+            g.add(_sum_plus_one, *[TaskRef(f"n{p}") for p in parents],
+                  name=key)
+        else:
+            g.literal(i, name=key)
+    return g.build()
+
+
+def _evaluate(dag: DAG) -> dict:
+    vals = {}
+    for k in dag.topological_order():
+        t = dag.tasks[k]
+        args = [vals[a.key] if isinstance(a, TaskRef) else a
+                for a in t.args]
+        vals[k] = t.fn(*args)
+    return vals
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 60))
+def test_topological_order_respects_all_edges(seed, n):
+    """Property: every dependency precedes its dependent."""
+    dag = _dag_from_dsk(_random_spec(seed, n))
+    order = dag.topological_order()
+    assert sorted(order) == sorted(dag.tasks)
+    pos = {k: i for i, k in enumerate(order)}
+    for k, deps in dag.deps.items():
+        for d in deps:
+            assert pos[d] < pos[k]
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 60))
+def test_critical_path_bounded_by_dag_size(seed, n):
+    """Property: 1 <= critical_path_length <= |V| (the longest chain
+    cannot visit a task twice in an acyclic graph)."""
+    dag = _dag_from_dsk(_random_spec(seed, n))
+    cp = dag.critical_path_length()
+    assert 1 <= cp <= len(dag)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 60))
+def test_from_dsk_agrees_with_graph_builder(seed, n):
+    """Property: the Dask-dict front-end and the GraphBuilder front-end
+    produce structurally identical DAGs that evaluate identically."""
+    spec = _random_spec(seed, n)
+    a, b = _dag_from_dsk(spec), _dag_from_builder(spec)
+    assert set(a.tasks) == set(b.tasks)
+    assert a.deps == b.deps
+    assert a.children == b.children
+    assert a.leaves == b.leaves
+    assert a.roots == b.roots
+    assert a.critical_path_length() == b.critical_path_length()
+    assert _evaluate(a) == _evaluate(b)
