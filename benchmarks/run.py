@@ -192,6 +192,60 @@ def _check_platform_gate(rows_by_fig: dict, smoke_kwargs: dict) -> None:
           file=sys.stderr)
 
 
+def _check_multitenant_gate(rows_by_fig: dict, smoke_kwargs: dict) -> None:
+    """CI regression gate for the multi-tenant orchestrator (fig15):
+
+    - *scale*: the smoke workload must run >= 32 jobs from >= 4 tenants
+      on one shared platform;
+    - *determinism*: re-running the shared/isolated smoke pair must
+      reproduce the recorded rows bit-identically — latency percentiles
+      AND per-tenant billed USD;
+    - *pooling pays*: the shared warm pool's p50 job latency must be
+      strictly below the isolated-per-job baseline's.
+    """
+    from benchmarks import common, fig15_multitenant
+
+    if common.SIM_SCALE > 0:
+        print("# multitenant gate skipped (real-time mode)", file=sys.stderr)
+        return
+    rows = {r["label"]: r for r in rows_by_fig.get("fig15", [])}
+    rate = smoke_kwargs["rates"][0]
+    n_tenants = 4
+    shared = rows.get(f"shared_pool_r{rate:g}_t{n_tenants}")
+    isolated = rows.get(f"isolated_per_job_r{rate:g}_t{n_tenants}")
+    if shared is None or isolated is None:
+        return
+    ps = shared["platform_stats"]
+    if ps["jobs"] < 32 or len(ps["per_tenant"]) < 4:
+        raise SystemExit(
+            f"multitenant regression: smoke ran only {ps['jobs']} jobs "
+            f"from {len(ps['per_tenant'])} tenants (>=32 from >=4 required)")
+    if ps["failed"]:
+        raise SystemExit(
+            f"multitenant regression: {ps['failed']} smoke jobs failed")
+    shared2, isolated2 = fig15_multitenant.shared_isolated_pair(
+        n_jobs=smoke_kwargs["n_jobs"], rate=rate, n_tenants=n_tenants,
+        max_concurrent_jobs=smoke_kwargs["max_concurrent_jobs"])
+    for first, second in ((shared, shared2), (isolated, isolated2)):
+        for field in ("wall_s", "p50_s", "p95_s", "p99_s",
+                      "per_tenant_billed", "platform_stats"):
+            if first[field] != second[field]:
+                raise SystemExit(
+                    f"multitenant regression: {first['label']} not "
+                    f"deterministic across runs — {field} "
+                    f"{first[field]!r} != {second[field]!r}")
+    if not shared["p50_s"] < isolated["p50_s"]:
+        raise SystemExit(
+            f"multitenant regression: shared pool p50 {shared['p50_s']:.3f}s "
+            f"not strictly below isolated-per-job {isolated['p50_s']:.3f}s")
+    print(f"# multitenant gate OK: {ps['jobs']} jobs/"
+          f"{len(ps['per_tenant'])} tenants deterministic; shared p50 "
+          f"{shared['p50_s']:.3f}s vs isolated {isolated['p50_s']:.3f}s "
+          f"(warm share {ps['warm_share'] * 100:.0f}% vs "
+          f"{isolated['platform_stats']['warm_share'] * 100:.0f}%)",
+          file=sys.stderr)
+
+
 def _check_dataplane_gate(rows_by_fig: dict) -> None:
     """CI regression gate: on the smoke workload the optimized data
     plane (striping + batched round trips) must not be charged more
@@ -234,6 +288,7 @@ def main() -> None:
         fig12_factor_analysis,
         fig13_task_cdf,
         fig14_platform,
+        fig15_multitenant,
     )
     from benchmarks import common
 
@@ -278,6 +333,12 @@ def main() -> None:
                        pool_lanes=8, fanout_n=512, fanout_burst=64,
                        fanout_cap=128),
                   dict()),
+        "fig15": (fig15_multitenant.run,
+                  dict(n_jobs=32, rates=(4.0,), tenant_counts=(4,),
+                       max_concurrent_jobs=32),
+                  dict(n_jobs=64, rates=(2.0, 8.0), tenant_counts=(2, 4),
+                       max_concurrent_jobs=32),
+                  dict()),
     }
     mode = 0 if args.smoke else (1 if args.quick else 2)
     only = set(args.only.split(",")) if args.only else None
@@ -315,6 +376,7 @@ def main() -> None:
     if args.smoke:
         _check_dataplane_gate(rows_by_fig)
         _check_platform_gate(rows_by_fig, figs["fig14"][1])
+        _check_multitenant_gate(rows_by_fig, figs["fig15"][1])
 
 
 if __name__ == "__main__":

@@ -56,6 +56,20 @@ def main() -> None:
           f"cold={ps['cold_starts']}, warm={ps['warm_reuses']}, "
           f"peak concurrency={ps['peak_concurrency']})")
 
+    # --- 6. multi-tenant traffic on ONE shared platform -----------------
+    from repro.core import JobOrchestrator, OrchestratorConfig, WorkloadConfig
+
+    traffic = JobOrchestrator(OrchestratorConfig(
+        workload=WorkloadConfig(n_jobs=16, arrival_rate_per_s=4.0,
+                                app_mix=(("tree_reduction", 1.0),)),
+        max_concurrent_jobs=8,
+    )).run()
+    print(f"orchestrator: {traffic.completed}/{traffic.jobs} jobs, "
+          f"p50={traffic.p50_s:.3f}s p99={traffic.p99_s:.3f}s, "
+          f"warm share {traffic.warm_share * 100:.0f}%, "
+          f"account bill ${traffic.billed_usd_total:.9f} across "
+          f"{len(traffic.per_tenant)} tenants")
+
 
 if __name__ == "__main__":
     main()

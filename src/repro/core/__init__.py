@@ -7,6 +7,7 @@ from repro.core.engine import (
     EngineConfig,
     JobError,
     JobReport,
+    JobSubstrate,
     ParallelInvokerEngine,
     PubSubEngine,
     ServerfulConfig,
@@ -15,7 +16,17 @@ from repro.core.engine import (
     WukongEngine,
 )
 from repro.core.faults import FaultConfig, SimulatedTaskFailure
-from repro.core.kvstore import CostModel, ShardedKVStore
+from repro.core.kvstore import CostModel, KVNamespace, ShardedKVStore
+from repro.core.orchestrator import (
+    JobOrchestrator,
+    JobRequest,
+    OrchestratorConfig,
+    OrchestratorReport,
+    Substrate,
+    TenantSpec,
+    WorkloadConfig,
+    generate_workload,
+)
 from repro.core.optimize import (
     ALL_PASSES,
     NO_PASSES,
@@ -47,9 +58,14 @@ def __getattr__(name):
 __all__ = [
     "DAG", "Task", "TaskRef", "GraphBuilder", "delayed_graph",
     "ENGINES", "EngineConfig", "CentralizedConfig", "ServerfulConfig",
-    "JobError", "JobReport", "WukongEngine", "StrawmanEngine",
-    "PubSubEngine", "ParallelInvokerEngine", "ServerfulEngine",
+    "JobError", "JobReport", "JobSubstrate", "WukongEngine",
+    "StrawmanEngine", "PubSubEngine", "ParallelInvokerEngine",
+    "ServerfulEngine",
     "FaultConfig", "SimulatedTaskFailure", "CostModel", "ShardedKVStore",
+    "KVNamespace",
+    "JobOrchestrator", "JobRequest", "OrchestratorConfig",
+    "OrchestratorReport", "Substrate", "TenantSpec", "WorkloadConfig",
+    "generate_workload",
     "StaticSchedule", "generate_static_schedules",
     "OptimizeConfig", "CompiledDAG", "PassStats", "compile_dag",
     "ALL_PASSES", "NO_PASSES",

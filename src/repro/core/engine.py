@@ -30,6 +30,7 @@ cross-checks.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import queue
 import threading
@@ -68,6 +69,52 @@ def _make_platform(config: "PlatformConfig | None", cost: CostModel,
 
 class JobError(RuntimeError):
     pass
+
+
+@dataclasses.dataclass
+class JobSubstrate:
+    """An injected execution substrate for ONE job on a shared platform.
+
+    By default every ``compute()`` builds a private KV store (and with
+    it a private clock) plus a private platform — fine for one-job
+    benchmarks, useless for studying contention. The orchestrator
+    (repro.core.orchestrator) instead builds the substrate ONCE and
+    passes each job a ``JobSubstrate``:
+
+    ``kv``        — the job's view of the shared store (normally a
+                    ``ShardedKVStore.namespace(job_id)`` so keys,
+                    counters, and channels don't collide across jobs);
+                    supplies the shared clock via ``kv.clock``.
+    ``platform``  — the SHARED stateful FaaS platform, so concurrent
+                    jobs compete for warm containers and the account
+                    concurrency cap and billing is account-wide. None
+                    keeps the legacy stochastic cold-start draw.
+    ``function``  — the platform function identity this job invokes
+                    (the orchestrator uses one function per *tenant*:
+                    warm containers pool per function, so tenants share
+                    the account but never each other's containers, and
+                    billing is attributable per tenant).
+
+    When a substrate is injected the engine creates none of the above
+    and ignores ``EngineConfig.platform``; everything else (invoker
+    pools, runtime pool, schedules, monitors) stays per-job.
+    """
+
+    kv: Any
+    platform: "FaaSPlatform | None" = None
+    function: str = "executor"
+
+
+def _enter_actor(clock) -> Any:
+    """Engine-side actor registration. Self-contained jobs register the
+    calling thread as the job's scheduler actor; a job launched by the
+    orchestrator arrives on a thread that is ALREADY an actor of the
+    shared clock (spawned via ``clock.spawn``), and re-registering would
+    corrupt the scheduler's actor table — so this becomes a no-op."""
+    current = getattr(clock, "_current", None)
+    if current is not None and current() is not None:
+        return contextlib.nullcontext()
+    return clock.actor()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -128,9 +175,16 @@ def _platform_stats(platform: "FaaSPlatform | None",
     its full snapshot (pool / throttle / billing counters). Without it:
     the legacy stochastic-draw counters — surfacing the per-pool
     ``cold_starts`` tally that was previously incremented but never
-    reported."""
+    reported.
+
+    The block is rebuilt defensively (top level AND nested dicts):
+    ``snapshot()`` promises fresh structures, but on a shared platform
+    two JobReports must never alias one counters dict even if that
+    contract regresses — we mutate the block right below, and callers
+    mutate it after us (benchmarks annotate rows in place)."""
     if platform is not None:
-        stats = platform.snapshot()
+        stats = {k: (dict(v) if isinstance(v, dict) else v)
+                 for k, v in platform.snapshot().items()}
     else:
         stats = {"mode": "legacy",
                  "cold_starts": sum(p.cold_starts for p in pools)}
@@ -151,6 +205,13 @@ class _ResultWaiter:
         self.kv = kv
         self.roots = set(roots)
         self.sub = kv.subscribe(RESULTS_CHANNEL)
+
+    def close(self) -> None:
+        """Release the results subscription. Without this every job
+        leaked its queue into the store's ``_channels`` — invisible when
+        the store died with the job, a real accumulation (and publish
+        fan-out slowdown) once the substrate outlives jobs."""
+        self.kv.unsubscribe(RESULTS_CHANNEL, self.sub)
 
     def wait(self, timeout_s: float) -> dict[str, Any]:
         clock = self.kv.clock
@@ -179,25 +240,39 @@ class WukongEngine:
     def __init__(self, config: EngineConfig | None = None):
         self.config = config or EngineConfig()
 
-    def compute(self, dag: DAG) -> JobReport:
+    def compute(self, dag: DAG,
+                substrate: JobSubstrate | None = None) -> JobReport:
         cfg = self.config
         # DAG compiler: rewrite/annotate before any schedule is generated.
         # Host-side work (compilation, schedule generation) happens before
         # the clock starts: it is scheduler prep, not simulated time.
         dag = ensure_compiled(dag, cfg.optimize)
-        kv = ShardedKVStore(
-            n_shards=cfg.n_kv_shards,
-            cost=cfg.cost,
-            colocate_shards=cfg.colocate_kv_shards,
-            counter_mode=cfg.counter_mode,
-        )
+        if substrate is None:
+            kv: Any = ShardedKVStore(
+                n_shards=cfg.n_kv_shards,
+                cost=cfg.cost,
+                colocate_shards=cfg.colocate_kv_shards,
+                counter_mode=cfg.counter_mode,
+            )
+        else:
+            kv = substrate.kv
+        function = substrate.function if substrate is not None else "executor"
         clock = kv.clock
         schedule_set = generate_static_schedules(dag)
         # The scheduler (this thread) is the first clock actor; every
         # other actor (invoker lanes, runtime workers, proxy, monitor) is
         # spawned through the clock so virtual time can only advance when
-        # all of them are quiescent.
-        with clock.actor():
+        # all of them are quiescent. (On an injected substrate the caller
+        # already runs as an actor of the shared clock — see
+        # ``_enter_actor``.)
+        with _enter_actor(clock):
+            # On a shared substrate the clock's cumulative charge counter
+            # does not restart per job: report the delta. (With jobs from
+            # OTHER tenants charging the same clock concurrently, the
+            # per-job delta includes their charges too — per-tenant money
+            # accounting goes through the platform's billing meter, which
+            # meters per invocation thread and is exact.)
+            charged0 = clock.charged_ms
             # Storage Manager registers the fan-in counters at workflow
             # start — in ONE batched round trip (Lambada-style request
             # batching), or one per counter when the factor is ablated.
@@ -212,24 +287,36 @@ class WukongEngine:
             heartbeats = HeartbeatRegistry()
             faults = FaultInjector(cfg.faults)
             pool = clock.pool(cfg.max_concurrency)
-            # One platform instance per job: initial and proxy invokers
-            # share the account concurrency cap and the container pool.
-            platform = _make_platform(cfg.platform, cfg.cost, clock)
+            # Self-contained: one platform instance per job (initial and
+            # proxy invokers share the cap and container pool). Injected:
+            # the SHARED platform — this job contends with every other
+            # job on the substrate.
+            if substrate is not None:
+                platform = substrate.platform
+            else:
+                platform = _make_platform(cfg.platform, cfg.cost, clock)
             initial_invokers = InvokerPool(
                 cfg.num_initial_invokers, cfg.cost, clock, pool, name="init",
-                platform=platform,
+                platform=platform, function=function,
             )
             proxy_invokers = InvokerPool(
                 cfg.num_proxy_invokers, cfg.cost, clock, pool, name="proxy",
-                platform=platform,
+                platform=platform, function=function,
             )
             proxy = FanoutProxy(kv, proxy_invokers) if cfg.use_proxy else None
+            # Per-job stop signal: set at teardown (success OR failure)
+            # and checked by executors at task boundaries and by spawn
+            # below, so an abandoned job's in-flight work winds down
+            # instead of consuming shared capacity.
+            stop_job = clock.event()
 
             ctx: ExecutorContext | None = None
 
             def spawn(start_key, seed_cache, schedule, width, attempt=0,
                       parent=None):
                 assert ctx is not None
+                if stop_job.is_set():
+                    return  # dead job: drop late retries/speculation
                 ship_ms = schedule.code_size_bytes / (
                     cfg.cost.schedule_ship_mbps * 1e6
                 ) * 1e3
@@ -252,12 +339,16 @@ class WukongEngine:
                 inline_fanout_args=cfg.inline_fanout_args,
                 coalesce_batch=getattr(dag, "coalesce_batch", 0),
                 batch_kv_round_trips=cfg.batch_kv_round_trips,
-                compute_clock=(platform.compute_clock(clock)
+                compute_clock=(platform.compute_clock(clock, function)
                                if platform is not None else None),
+                stop=stop_job,
             )
 
             waiter = _ResultWaiter(kv, dag.roots)
             t0_ms = clock.now_ms()
+            # Metric stamps are relative to the job's t0 (the clock is
+            # shared and does not restart per job).
+            metrics.origin_ms = t0_ms
             # Initial Task Executor Invokers: one executor per start batch
             # — one batch per static schedule (paper §IV-C), or fewer when
             # the coalescing pass grouped sibling leaves.
@@ -273,12 +364,22 @@ class WukongEngine:
             try:
                 results = waiter.wait(cfg.job_timeout_s)
             finally:
+                stop_job.set()
                 stop_monitor.set()
                 initial_invokers.close()
                 proxy_invokers.close()
                 if proxy is not None:
                     proxy.close()
-                pool.shutdown(wait=False, cancel_futures=True)
+                waiter.close()
+                # Platform mode: queued-but-unstarted bodies are WRAPPED
+                # invocations already holding a concurrency slot and a
+                # container (reserved by the invoker lane); cancelling
+                # them would leak both into the shared account forever.
+                # They must run — the stop signal makes each return at
+                # its first task boundary, and the wrapper's finally
+                # releases the reservation. Without a platform nothing
+                # is reserved, so queued bodies are safely dropped.
+                pool.shutdown(wait=False, cancel_futures=platform is None)
             wall = (clock.now_ms() - t0_ms) / 1e3
             # Snapshot every counter INSIDE the actor block: the run
             # token serializes this read against any still-draining
@@ -293,7 +394,7 @@ class WukongEngine:
                 + proxy_invokers.invocations,
                 kv_stats=kv.stats.snapshot(),
                 metrics=list(metrics.records),
-                charged_ms=clock.charged_ms,
+                charged_ms=clock.charged_ms - charged0,
                 optimizer=getattr(dag, "pass_stats", ()),
                 platform_stats=_platform_stats(
                     platform, [initial_invokers, proxy_invokers]),
@@ -372,21 +473,30 @@ class _CentralizedEngine:
     def __init__(self, config: CentralizedConfig | None = None):
         self.config = config or CentralizedConfig()
 
-    def compute(self, dag: DAG) -> JobReport:
+    def compute(self, dag: DAG,
+                substrate: JobSubstrate | None = None) -> JobReport:
         cfg = self.config
         dag = ensure_compiled(dag, cfg.optimize)
-        kv = ShardedKVStore(
-            n_shards=cfg.n_kv_shards, cost=cfg.cost,
-            colocate_shards=cfg.colocate_kv_shards,
-        )
+        if substrate is None:
+            kv: Any = ShardedKVStore(
+                n_shards=cfg.n_kv_shards, cost=cfg.cost,
+                colocate_shards=cfg.colocate_kv_shards,
+            )
+        else:
+            kv = substrate.kv
+        function = substrate.function if substrate is not None else "executor"
         clock = kv.clock
-        with clock.actor():
+        with _enter_actor(clock):
+            charged0 = clock.charged_ms
             metrics = TaskMetrics(clock)
             pool = clock.pool(cfg.max_concurrency)
-            platform = _make_platform(cfg.platform, cfg.cost, clock)
+            if substrate is not None:
+                platform = substrate.platform
+            else:
+                platform = _make_platform(cfg.platform, cfg.cost, clock)
             invokers = InvokerPool(cfg.num_invokers, cfg.cost, clock, pool,
-                                   platform=platform)
-            compute_clock = (platform.compute_clock(clock)
+                                   platform=platform, function=function)
+            compute_clock = (platform.compute_clock(clock, function)
                              if platform is not None else clock)
             done_q = clock.queue()
             inflight = [0]
@@ -445,6 +555,7 @@ class _CentralizedEngine:
 
             indeg = {k: len(dag.deps[k]) for k in dag.tasks}
             t0_ms = clock.now_ms()
+            metrics.origin_ms = t0_ms
             for k in dag.leaves:
                 invokers.submit(lambda_body(k))
             remaining = set(dag.tasks)
@@ -469,7 +580,10 @@ class _CentralizedEngine:
                             invokers.submit(lambda_body(child))
             finally:
                 invokers.close()
-                pool.shutdown(wait=False, cancel_futures=True)
+                # See WukongEngine.compute: platform-wrapped queued
+                # bodies hold reservations that only their wrapper's
+                # finally releases — run them, don't drop them.
+                pool.shutdown(wait=False, cancel_futures=platform is None)
             wall = (clock.now_ms() - t0_ms) / 1e3
             results = {k: kv.get(k) for k in dag.roots}
             # Snapshot inside the actor block (see WukongEngine.compute).
@@ -480,7 +594,7 @@ class _CentralizedEngine:
                 executors_invoked=invokers.invocations,
                 kv_stats=kv.stats.snapshot(),
                 metrics=list(metrics.records),
-                charged_ms=clock.charged_ms,
+                charged_ms=clock.charged_ms - charged0,
                 optimizer=getattr(dag, "pass_stats", ()),
                 platform_stats=_platform_stats(platform, [invokers]),
             )
@@ -619,6 +733,7 @@ class ServerfulEngine:
 
             indeg = {k: len(dag.deps[k]) for k in dag.tasks}
             t0_ms = clock.now_ms()
+            metrics.origin_ms = t0_ms
             rr = 0
             for k in dag.leaves:
                 pool.submit(run_on_worker(k, pick_worker(k, rr)))
@@ -645,6 +760,8 @@ class ServerfulEngine:
                                 run_on_worker(child, pick_worker(child, rr)))
                             rr += 1
             finally:
+                # No FaaS platform here (fixed cluster): queued bodies
+                # hold no reservations and are safe to drop.
                 pool.shutdown(wait=False, cancel_futures=True)
             wall = (clock.now_ms() - t0_ms) / 1e3
             with owner_lock:

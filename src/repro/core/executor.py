@@ -62,11 +62,16 @@ class TaskMetrics:
     def __init__(self, clock: BaseClock | None = None) -> None:
         self._lock = threading.Lock()
         self.clock = clock
+        # Stamps are relative to this origin (the engine sets it to the
+        # job's t0). On a shared substrate the clock does not restart per
+        # job, so absolute stamps would make otherwise-identical jobs
+        # report differently.
+        self.origin_ms = 0.0
         self.records: list[dict[str, Any]] = []
 
     def record(self, **kw: Any) -> None:
         if self.clock is not None and "at_ms" not in kw:
-            kw["at_ms"] = self.clock.now_ms()
+            kw["at_ms"] = self.clock.now_ms() - self.origin_ms
         with self._lock:
             self.records.append(kw)
 
@@ -87,6 +92,7 @@ class ExecutorContext:
         coalesce_batch: int = 0,
         batch_kv_round_trips: bool = True,
         compute_clock: Any = None,
+        stop: Any = None,
     ):
         self.dag = dag
         self.kv = kv
@@ -105,8 +111,16 @@ class ExecutorContext:
         # passes a memory-scaled proxy here (CPU share proportional to
         # memory size); None = the engine clock unscaled.
         self.compute_clock = compute_clock or kv.clock
+        # Per-job stop signal (Event-compatible). Set when the job
+        # resolves OR fails; executors check it at task boundaries so an
+        # abandoned job stops consuming shared warm-pool / throttle /
+        # lane capacity instead of running its walk to the end.
+        self.stop = stop
         self._id_lock = threading.Lock()
         self._next_id = 0
+
+    def stopped(self) -> bool:
+        return self.stop is not None and self.stop.is_set()
 
     def next_executor_id(self) -> int:
         with self._id_lock:
@@ -208,7 +222,9 @@ class TaskExecutor:
             self._walk()
         except SimulatedTaskFailure:
             failed = self._failed_at
-            if self.attempt < self.ctx.faults.config.max_retries:
+            if self.ctx.stopped():
+                pass  # dead job: no retry, no error publish
+            elif self.attempt < self.ctx.faults.config.max_retries:
                 # Lambda's retry delay: charged (not slept) on the clock,
                 # exponential in the attempt number.
                 backoff = self.ctx.faults.retry_backoff_ms(self.attempt)
@@ -270,6 +286,13 @@ class TaskExecutor:
         prev: str | None = self.parent
 
         while True:
+            # ---- job-cancellation boundary -------------------------------
+            if self.ctx.stopped():
+                # The job resolved or failed while this executor was in
+                # flight: stop here rather than walking (and billing)
+                # the rest of the path against a dead job.
+                return
+
             # ---- fan-in operation (paper §IV-C) --------------------------
             indeg = len(dag.deps[current])
             if indeg > 1:

@@ -105,6 +105,11 @@ class InvokerPool:
         # exactly how SDK-side throttling backs pressure up the client.
         attempt = 0
         while not platform.try_reserve():
+            if self._closed:
+                # Job torn down while this lane was stuck in 429 retry:
+                # nothing is reserved yet, so just drop the invocation
+                # instead of fighting live tenants for the account cap.
+                return False
             self.clock.charge(platform.backoff_ms(attempt))
             attempt += 1
         # The invoke API round trip precedes container assignment (as on
@@ -131,6 +136,12 @@ class InvokerPool:
             item = self._q.get()
             if item is None:
                 return
+            if self._closed:
+                # The job resolved/failed with this invocation still
+                # queued: drop it WITHOUT charging invoke latency or
+                # touching the platform — a dead job must not consume
+                # shared warm-pool or concurrency-cap capacity.
+                continue
             body, extra_ms = item
             with self._lock:
                 self.invocations += 1
@@ -187,4 +198,10 @@ class FanoutProxy:
 
     def close(self) -> None:
         self._stop.set()
+        # The shutdown sentinel is already queued on our subscription, so
+        # releasing it immediately after is safe — and mandatory on a
+        # substrate that outlives this job: an abandoned proxy
+        # subscription would receive (and leak) every later job's
+        # fan-out messages on this channel name.
         self.kv.publish(self.CHANNEL, None)
+        self.kv.unsubscribe(self.CHANNEL, self._sub)

@@ -43,6 +43,16 @@ Fan-in dependency counters (paper §IV-C) are atomic. Two modes:
   Lambda-style automatic retries and speculative duplicate executors
   cannot double-fire a fan-in — a correctness hole in the paper's INCR
   scheme that we close (see DESIGN.md §2).
+
+Multi-tenancy (the orchestrator substrate): ``namespace(job_id)`` returns
+a :class:`KVNamespace` — a per-job view over the shared store that
+prefixes every key, counter id, and pub/sub channel with the job id and
+keeps its OWN :class:`KVStats`, so N concurrent jobs share the shards,
+lanes, and clock (contending for them, which is the point) without
+colliding on names or polluting each other's reports. Shard *placement*
+ignores the namespace prefix, so a job's data-plane behavior (placement,
+lane contention with itself) is independent of which job id it was
+assigned — two identical jobs on one substrate report identically.
 """
 from __future__ import annotations
 
@@ -54,6 +64,33 @@ import zlib
 from typing import Any, Iterable, Mapping
 
 from repro.core.simclock import BaseClock, clock_for_scale
+
+# Separator between a namespace (job id) and the user key. Placement
+# hashing strips everything up to the first separator, so a namespaced
+# key lands on the same shard its bare key would.
+NAMESPACE_SEP = "::"
+
+# Per-thread stats sink: while a KVNamespace call is on the stack, the
+# parent store's counter bumps are mirrored into the view's own KVStats
+# (the view can't re-derive byte counts — entry sizes are recorded once
+# at put time and not returned by the ops).
+_stats_sink = threading.local()
+
+
+class _SinkScope:
+    """Installs a view as this thread's stats sink for one parent call."""
+
+    __slots__ = ("view", "_prev")
+
+    def __init__(self, view: "KVNamespace"):
+        self.view = view
+
+    def __enter__(self) -> None:
+        self._prev = getattr(_stats_sink, "view", None)
+        _stats_sink.view = self.view
+
+    def __exit__(self, *exc: Any) -> None:
+        _stats_sink.view = self._prev
 
 
 def sizeof(value: Any) -> int:
@@ -253,15 +290,44 @@ class ShardedKVStore:
         self._counter_lock = threading.Lock()
         self._channels: dict[str, list[Any]] = {}
         self._chan_lock = threading.Lock()
+        # Namespaces handed out by ``namespace()``. Placement hashing
+        # only strips prefixes registered here, so ordinary user keys
+        # that happen to contain the separator keep their placement.
+        self._namespaces: set[str] = set()
+        self._ns_lock = threading.Lock()
         self.stats = KVStats()
         self._stats_lock = threading.Lock()
 
+    # -- stats -------------------------------------------------------------
+    def _bump(self, **fields: int) -> None:
+        """Add counter deltas to the store stats and, when the call came
+        through a :class:`KVNamespace`, to that view's stats too."""
+        with self._stats_lock:
+            st = self.stats
+            for name, delta in fields.items():
+                setattr(st, name, getattr(st, name) + delta)
+        view = getattr(_stats_sink, "view", None)
+        if view is not None:
+            view._bump(**fields)
+
     # -- placement ---------------------------------------------------------
+    def _placement_key(self, key: str) -> str:
+        """The key placement hashes on: a REGISTERED namespace prefix is
+        stripped, so a job's placement (and therefore its self-contention
+        profile) must not depend on its job id. Only registered prefixes
+        count — an ordinary user key that happens to contain the
+        separator keeps its full-key placement."""
+        head, sep, rest = key.partition(NAMESPACE_SEP)
+        if sep and head in self._namespaces:
+            return rest
+        return key
+
     def _shard_index(self, key: str) -> int:
         # Stable across processes (unlike hash(), which PYTHONHASHSEED
         # randomizes), so shard placement — and therefore lane contention
         # and benchmark numbers — is reproducible run to run.
-        return zlib.crc32(key.encode("utf-8")) % len(self.shards)
+        return zlib.crc32(
+            self._placement_key(key).encode("utf-8")) % len(self.shards)
 
     def _shard(self, key: str) -> _Shard:
         return self.shards[self._shard_index(key)]
@@ -371,10 +437,7 @@ class ShardedKVStore:
         if n_stripes > 1:
             self._write_stripes(key, value, nbytes, n_stripes,
                                 if_absent=False)
-            with self._stats_lock:
-                self.stats.puts += 1
-                self.stats.striped_puts += 1
-                self.stats.bytes_written += nbytes
+            self._bump(puts=1, striped_puts=1, bytes_written=nbytes)
             return
         shard = self._shard(key)
         self._pay(shard, nbytes)
@@ -384,9 +447,7 @@ class ShardedKVStore:
         if isinstance(old, _StripeManifest):
             # the overwritten value was striped: reclaim its stripes
             self._drop_stripes(key, old.n_stripes)
-        with self._stats_lock:
-            self.stats.puts += 1
-            self.stats.bytes_written += nbytes
+        self._bump(puts=1, bytes_written=nbytes)
 
     def put_if_absent(self, key: str, value: Any,
                       nbytes: int | None = None) -> bool:
@@ -402,19 +463,14 @@ class ShardedKVStore:
             if not self._write_stripes(key, value, nbytes, n_stripes,
                                        if_absent=True):
                 return False
-            with self._stats_lock:
-                self.stats.puts += 1
-                self.stats.striped_puts += 1
-                self.stats.bytes_written += nbytes
+            self._bump(puts=1, striped_puts=1, bytes_written=nbytes)
             return True
         self._pay(shard, nbytes)
         with shard.lock:
             if key in shard.data:
                 return False
             shard.data[key] = _Entry(value, nbytes)
-        with self._stats_lock:
-            self.stats.puts += 1
-            self.stats.bytes_written += nbytes
+        self._bump(puts=1, bytes_written=nbytes)
         return True
 
     def get(self, key: str) -> Any:
@@ -427,16 +483,11 @@ class ShardedKVStore:
             layout = self._stripe_layout(key, entry.nbytes, entry.n_stripes)
             self.clock.charge(self.cost.kv_base_ms)
             self._charge_striped_transfer(layout)
-            with self._stats_lock:
-                self.stats.gets += 1
-                self.stats.striped_gets += 1
-                self.stats.bytes_read += entry.nbytes
+            self._bump(gets=1, striped_gets=1, bytes_read=entry.nbytes)
             return entry.value
         # Size was recorded once at put time; reads never re-derive it.
         self._pay(shard, entry.nbytes)
-        with self._stats_lock:
-            self.stats.gets += 1
-            self.stats.bytes_read += entry.nbytes
+        self._bump(gets=1, bytes_read=entry.nbytes)
         return entry.value
 
     def exists(self, key: str) -> bool:
@@ -504,8 +555,7 @@ class ShardedKVStore:
         self.clock.charge(self.cost.kv_base_ms)
         with self._counter_lock:
             count = self._record_edge_locked(counter_id, edge_id)
-        with self._stats_lock:
-            self.stats.incrs += 1
+        self._bump(incrs=1)
         return count
 
     def deposit_and_increment(
@@ -583,12 +633,12 @@ class ShardedKVStore:
                 with shard.lock:
                     if key not in shard.data:
                         missing.append(key)
-        with self._stats_lock:
-            self.stats.incrs += 1
-            self.stats.puts += len(stored)
-            self.stats.striped_puts += sum(
-                1 for _, _, n in stored if n > 1)
-            self.stats.bytes_written += sum(nb for _, nb, _ in stored)
+        self._bump(
+            incrs=1,
+            puts=len(stored),
+            striped_puts=sum(1 for _, _, n in stored if n > 1),
+            bytes_written=sum(nb for _, nb, _ in stored),
+        )
         # Transfer time is charged outside the counter lock: the bytes are
         # already durable; only the simulated clock accounting remains.
         for key, nbytes, n_stripes in stored:
@@ -611,11 +661,42 @@ class ShardedKVStore:
     def subscribe(self, channel: str) -> Any:
         """Returns a ``queue.Queue``-compatible subscription (clock-aware
         in virtual mode, so blocked subscribers never hold back virtual
-        time)."""
+        time). Callers MUST :meth:`unsubscribe` the returned queue when
+        done — on a substrate that outlives one job, an abandoned
+        subscription is a leak: it accumulates in ``_channels`` forever
+        and every later ``publish`` still fans out to it."""
         q = self.clock.queue()
         with self._chan_lock:
             self._channels.setdefault(channel, []).append(q)
         return q
+
+    def unsubscribe(self, channel: str, q: Any) -> None:
+        """Release a subscription returned by :meth:`subscribe`. The
+        channel entry is dropped once its last subscriber leaves, so a
+        torn-down job leaves ``_channels`` exactly as it found it.
+        Idempotent: unsubscribing twice (or a queue that was never
+        subscribed) is a no-op."""
+        with self._chan_lock:
+            subs = self._channels.get(channel)
+            if subs is None:
+                return
+            try:
+                subs.remove(q)
+            except ValueError:
+                return
+            if not subs:
+                del self._channels[channel]
+
+    def subscriber_count(self, channel: str | None = None,
+                         prefix: str = "") -> int:
+        """Live subscriptions on ``channel`` (channels starting with
+        ``prefix`` when None; every channel by default) — the
+        leak-regression observable for teardown tests."""
+        with self._chan_lock:
+            if channel is not None:
+                return len(self._channels.get(channel, ()))
+            return sum(len(subs) for ch, subs in self._channels.items()
+                       if ch.startswith(prefix))
 
     def publish(self, channel: str, message: Any) -> None:
         self.clock.charge(self.cost.pubsub_msg_ms)
@@ -623,8 +704,7 @@ class ShardedKVStore:
             subs = list(self._channels.get(channel, ()))
         for q in subs:
             q.put(message)
-        with self._stats_lock:
-            self.stats.publishes += 1
+        self._bump(publishes=1)
 
     # -- bulk --------------------------------------------------------------
     def mget(self, keys: Iterable[str]) -> list[Any]:
@@ -667,13 +747,177 @@ class ShardedKVStore:
         for k, manifest in striped:
             self._charge_striped_transfer(
                 self._stripe_layout(k, manifest.nbytes, manifest.n_stripes))
-        with self._stats_lock:
-            self.stats.gets += len(queued)
-            self.stats.striped_gets += n_striped
-            self.stats.mget_batches += len(by_shard)
-            self.stats.bytes_read += total_bytes
+        self._bump(gets=len(queued), striped_gets=n_striped,
+                   mget_batches=len(by_shard), bytes_read=total_bytes)
         return [entries[k].value for k in keys]
 
+    def reset_stats(self) -> None:
+        with self._stats_lock:
+            self.stats = KVStats()
+
+    # -- multi-tenancy ------------------------------------------------------
+    def namespace(self, name: str) -> "KVNamespace":
+        """A per-job view of this store: keys, counter ids, and pub/sub
+        channels are prefixed with ``name`` and the view keeps its own
+        :class:`KVStats`. Shards, transfer lanes, and the clock are
+        shared — which is exactly how concurrent jobs contend. The name
+        is registered so placement hashing can strip it (and ONLY
+        registered prefixes)."""
+        view = KVNamespace(self, name)
+        with self._ns_lock:
+            self._namespaces.add(name)
+        return view
+
+    def drop_namespace(self, name: str) -> int:
+        """Host-side reclamation of a finished job's namespaced state:
+        every object (incl. stripe records), fan-in counter, and channel
+        under ``name`` is removed; returns the number of objects
+        dropped. On a substrate that outlives jobs this is what keeps
+        store memory O(concurrent jobs) instead of O(total traffic) —
+        the provider reclaiming a job's intermediates, so it charges
+        nothing on the clock. A straggling executor of the dropped job
+        may re-create a few entries afterwards (its writes are
+        if-absent); the stop signal bounds that residue to the job's
+        in-flight work."""
+        prefix = name + NAMESPACE_SEP
+        removed = 0
+        for shard in self.shards:
+            with shard.lock:
+                doomed = [k for k in shard.data if k.startswith(prefix)]
+                for k in doomed:
+                    del shard.data[k]
+                removed += len(doomed)
+        with self._counter_lock:
+            for cid in [c for c in self._counters if c.startswith(prefix)]:
+                del self._counters[cid]
+            for cid in [c for c in self._counter_widths
+                        if c.startswith(prefix)]:
+                del self._counter_widths[cid]
+        with self._chan_lock:
+            for ch in [c for c in self._channels if c.startswith(prefix)]:
+                del self._channels[ch]
+        return removed
+
+
+class KVNamespace:
+    """A job-scoped view over a shared :class:`ShardedKVStore`.
+
+    Engine-compatible: exposes the same op surface the executors and
+    schedulers use, rewriting every key / counter id / channel to
+    ``"<name>::<key>"`` before delegating, and keeping its OWN stats so
+    a JobReport built from a shared store never includes another job's
+    traffic. All *costs* (clock charges, lane occupancy) hit the shared
+    substrate — the view renames, it does not isolate performance.
+    """
+
+    def __init__(self, parent: ShardedKVStore, name: str):
+        if NAMESPACE_SEP in name:
+            raise ValueError(f"namespace may not contain {NAMESPACE_SEP!r}")
+        self.parent = parent
+        self.name = name
+        self._prefix = name + NAMESPACE_SEP
+        self.cost = parent.cost
+        self.clock = parent.clock
+        self.counter_mode = parent.counter_mode
+        self.stats = KVStats()
+        self._stats_lock = threading.Lock()
+
+    def _k(self, key: str) -> str:
+        return self._prefix + key
+
+    def _bump(self, **fields: int) -> None:
+        with self._stats_lock:
+            st = self.stats
+            for name, delta in fields.items():
+                setattr(st, name, getattr(st, name) + delta)
+
+    # -- object store -------------------------------------------------------
+    def put(self, key: str, value: Any, nbytes: int | None = None) -> None:
+        with _SinkScope(self):
+            self.parent.put(self._k(key), value, nbytes)
+
+    def put_if_absent(self, key: str, value: Any,
+                      nbytes: int | None = None) -> bool:
+        with _SinkScope(self):
+            return self.parent.put_if_absent(self._k(key), value, nbytes)
+
+    def get(self, key: str) -> Any:
+        with _SinkScope(self):
+            try:
+                return self.parent.get(self._k(key))
+            except KeyError:
+                raise KeyError(key) from None
+
+    def exists(self, key: str) -> bool:
+        return self.parent.exists(self._k(key))
+
+    def delete(self, key: str) -> None:
+        self.parent.delete(self._k(key))
+
+    def mget(self, keys: Iterable[str]) -> list[Any]:
+        with _SinkScope(self):
+            return self.parent.mget([self._k(k) for k in keys])
+
+    def stripes_for(self, nbytes: int) -> int:
+        return self.parent.stripes_for(nbytes)
+
+    # -- fan-in counters ----------------------------------------------------
+    def register_counter(self, counter_id: str, width: int) -> None:
+        self.parent.register_counter(self._k(counter_id), width)
+
+    def register_counters(self, widths: Mapping[str, int]) -> None:
+        self.parent.register_counters(
+            {self._k(cid): width for cid, width in widths.items()})
+
+    def increment_dependency(self, counter_id: str, edge_id: str) -> int:
+        with _SinkScope(self):
+            return self.parent.increment_dependency(
+                self._k(counter_id), edge_id)
+
+    def deposit_and_increment(
+        self,
+        counter_id: str,
+        edge_id: str,
+        items: "dict[str, Any]",
+        expected: "tuple[str, ...]" = (),
+    ) -> "tuple[int, list[str]]":
+        with _SinkScope(self):
+            count, missing = self.parent.deposit_and_increment(
+                self._k(counter_id),
+                edge_id,
+                {self._k(k): v for k, v in items.items()},
+                tuple(self._k(k) for k in expected),
+            )
+        plen = len(self._prefix)
+        return count, [k[plen:] for k in missing]
+
+    def counter_value(self, counter_id: str) -> int:
+        return self.parent.counter_value(self._k(counter_id))
+
+    # -- pub/sub ------------------------------------------------------------
+    def subscribe(self, channel: str) -> Any:
+        return self.parent.subscribe(self._k(channel))
+
+    def unsubscribe(self, channel: str, q: Any) -> None:
+        self.parent.unsubscribe(self._k(channel), q)
+
+    def subscriber_count(self, channel: str | None = None) -> int:
+        """THIS view's live subscriptions only: with ``channel=None``
+        the count covers the namespace's channels, never another job's."""
+        if channel is not None:
+            return self.parent.subscriber_count(self._k(channel))
+        return self.parent.subscriber_count(None, prefix=self._prefix)
+
+    def purge(self) -> int:
+        """Reclaim everything this view ever stored (see
+        ``ShardedKVStore.drop_namespace``)."""
+        return self.parent.drop_namespace(self.name)
+
+    def publish(self, channel: str, message: Any) -> None:
+        with _SinkScope(self):
+            self.parent.publish(self._k(channel), message)
+
+    # -- stats --------------------------------------------------------------
     def reset_stats(self) -> None:
         with self._stats_lock:
             self.stats = KVStats()

@@ -1,0 +1,530 @@
+"""Multi-tenant job orchestrator: N concurrent DAG jobs, ONE platform.
+
+The paper (and PRs 1-4) run one job at a time: every ``compute()`` call
+builds a private KV store, a private clock, and a private platform, so
+the warm-container pool and the account concurrency cap never experience
+cross-job contention — yet the serverless premise ("pay per use on a
+shared auto-scaling provider") only pays off in exactly that regime, and
+the ROADMAP north star (serve heavy traffic from many users) is this
+axis. ServerMix's tradeoff analysis and Triggerflow's multi-workflow
+orchestration both study it; this module makes it runnable here:
+
+- ``Substrate``        — ONE VirtualClock, ONE ShardedKVStore, and (in
+                         shared mode) ONE stateful FaaS platform for all
+                         jobs. Each job sees the store through a per-job
+                         ``KVNamespace`` so names never collide while
+                         shards/lanes/clock genuinely contend.
+- one platform *function per tenant* — warm containers pool per
+  function (tenants share the account concurrency cap and the billing
+  account, never each other's containers), each with its own memory
+  size (billing rate AND compute speed).
+- ``generate_workload`` — seeded Poisson arrivals with a heavy-tailed
+                          size mix over the paper's four applications,
+                          deterministic under the virtual clock.
+- ``JobOrchestrator``  — admits jobs against ``max_concurrent_jobs``
+                         with per-tenant fair admission (least-loaded
+                         tenant first), runs each admitted job as a
+                         clock actor via the engine's injected-substrate
+                         path, and reduces everything into an
+                         ``OrchestratorReport`` (p50/p95/p99 job
+                         latency, per-tenant billed USD, warm-share,
+                         peak concurrency).
+
+``isolate_platform=True`` is the control arm: same workload, same
+admission, but every job gets a fresh platform — no cross-job warm
+reuse, no shared cap. The fig15 benchmark compares the two.
+
+Everything runs on the shared clock's primitives, so a full sweep is
+bit-identical across runs (the fig15 smoke gate asserts this down to
+per-tenant billed USD).
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue as _queue
+from collections import deque
+from typing import TYPE_CHECKING, Any
+
+from repro.core.engine import EngineConfig, JobSubstrate, WukongEngine
+from repro.core.kvstore import ShardedKVStore
+
+if TYPE_CHECKING:  # import cycle: repro.platform imports repro.core
+    from repro.platform import FaaSPlatform, PlatformConfig
+
+
+# ---------------------------------------------------------------------------
+# Workload model
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantSpec:
+    """One tenant = one deployed platform function.
+
+    ``memory_mb`` is the tenant's function size: its billing rate (GB-s)
+    and its compute speed (CPU share proportional to memory), so tenants
+    on one account genuinely differ in cost/latency profile."""
+
+    name: str
+    memory_mb: int = 1792
+
+
+DEFAULT_TENANTS: "tuple[TenantSpec, ...]" = (
+    TenantSpec("tenant-a", 1792),
+    TenantSpec("tenant-b", 1792),
+    TenantSpec("tenant-c", 896),
+    TenantSpec("tenant-d", 3584),
+)
+
+# app name -> ladder of job sizes, small to large. The ladder index is
+# drawn heavy-tailed (geometric), the paper's "many small jobs, few
+# huge ones" traffic shape.
+_SIZE_LADDERS: "dict[str, tuple[Any, ...]]" = {
+    # tree_reduction: array length n (n/2 leaf tasks)
+    "tree_reduction": (8, 16, 32, 64, 128),
+    # gemm: (n, block_size)
+    "gemm": ((64, 32), (128, 32), (128, 64)),
+    # svd (TSQR): (rows, cols, n_blocks)
+    "svd": ((256, 32, 4), (512, 32, 8), (1024, 32, 8)),
+    # svc: (n_samples, n_blocks, n_iters)
+    "svc": ((512, 4, 2), (1024, 4, 2), (2048, 8, 2)),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadConfig:
+    """Seeded multi-tenant traffic: Poisson arrivals, heavy-tailed mix."""
+
+    n_jobs: int = 32
+    arrival_rate_per_s: float = 4.0   # Poisson arrival intensity
+    seed: int = 0
+    tenants: "tuple[TenantSpec, ...]" = DEFAULT_TENANTS
+    # (app, weight) — drawn per job. Defaults lean on tree reduction
+    # (numpy payloads) with a minority of the linear-algebra apps.
+    app_mix: "tuple[tuple[str, float], ...]" = (
+        ("tree_reduction", 0.55),
+        ("gemm", 0.20),
+        ("svd", 0.15),
+        ("svc", 0.10),
+    )
+    # P(size rank r) proportional to size_tail**r: ~55% smallest size,
+    # a long tail of big jobs at the default 0.45.
+    size_tail: float = 0.45
+    # Per-task simulated compute at the baseline memory size; the
+    # linear-algebra apps convert it to ms-per-flop at their smallest
+    # task size so every app's tasks land in the same duration regime.
+    compute_ms: float = 20.0
+    payload_bytes: int = 0            # edge ballast (tree reduction only)
+
+
+@dataclasses.dataclass(frozen=True)
+class JobRequest:
+    """One job of the workload: which tenant submits which DAG when."""
+
+    job_id: int
+    tenant: str
+    app: str
+    size: Any                  # entry of the app's size ladder
+    arrival_ms: float          # simulated submit time
+    compute_ms: float = 20.0
+    payload_bytes: int = 0
+
+    @property
+    def name(self) -> str:
+        return f"job{self.job_id}"
+
+    def build_dag(self):
+        """Materialize the job's DAG (lazy app import: repro.apps sits
+        above repro.core in the layering)."""
+        if self.app == "tree_reduction":
+            from repro.apps import tree_reduction_dag
+
+            return tree_reduction_dag(self.size,
+                                      compute_ms=self.compute_ms,
+                                      payload_bytes=self.payload_bytes)
+        if self.app == "gemm":
+            from repro.apps import gemm_dag
+
+            n, bs = self.size
+            return gemm_dag(n, bs,
+                            ms_per_flop=self.compute_ms / (2.0 * bs ** 3))
+        if self.app == "svd":
+            from repro.apps import tsqr_svd_dag
+
+            rows, cols, n_blocks = self.size
+            block_flops = 2.0 * (rows / n_blocks) * cols * cols
+            return tsqr_svd_dag(rows, cols=cols, n_blocks=n_blocks,
+                                ms_per_flop=self.compute_ms / block_flops)
+        if self.app == "svc":
+            from repro.apps import svc_dag
+
+            n_samples, n_blocks, n_iters = self.size
+            from repro.apps.svc import DIM
+
+            block_flops = 2.0 * (n_samples / n_blocks) * DIM
+            return svc_dag(n_samples, n_blocks=n_blocks, n_iters=n_iters,
+                           ms_per_flop=self.compute_ms / block_flops)
+        raise ValueError(f"unknown app {self.app!r}")
+
+
+def generate_workload(cfg: WorkloadConfig) -> "list[JobRequest]":
+    """Seeded job stream: exponential inter-arrival times (Poisson
+    process), tenants drawn uniformly, apps by ``app_mix`` weight, sizes
+    heavy-tailed down each app's ladder. Pure function of ``cfg`` — the
+    determinism gate reruns it and expects the identical stream."""
+    import random
+
+    rng = random.Random(cfg.seed)
+    apps = [a for a, _ in cfg.app_mix]
+    weights = [w for _, w in cfg.app_mix]
+    total_w = sum(weights)
+    jobs: list[JobRequest] = []
+    t_ms = 0.0
+    for job_id in range(cfg.n_jobs):
+        t_ms += rng.expovariate(cfg.arrival_rate_per_s) * 1e3
+        tenant = cfg.tenants[rng.randrange(len(cfg.tenants))]
+        # weighted app draw
+        x = rng.random() * total_w
+        app = apps[-1]
+        for a, w in cfg.app_mix:
+            if x < w:
+                app = a
+                break
+            x -= w
+        ladder = _SIZE_LADDERS[app]
+        # geometric (heavy-tailed) rank, clamped to the ladder
+        rank = 0
+        while rank < len(ladder) - 1 and rng.random() < cfg.size_tail:
+            rank += 1
+        jobs.append(JobRequest(
+            job_id=job_id,
+            tenant=tenant.name,
+            app=app,
+            size=ladder[rank],
+            arrival_ms=t_ms,
+            compute_ms=cfg.compute_ms,
+            payload_bytes=cfg.payload_bytes,
+        ))
+    return jobs
+
+
+# ---------------------------------------------------------------------------
+# The shared substrate
+# ---------------------------------------------------------------------------
+
+
+class Substrate:
+    """One clock + one store (+ optionally one platform) shared by every
+    job the orchestrator runs. ``job_substrate`` hands out the per-job
+    ``JobSubstrate`` views the refactored engines accept."""
+
+    def __init__(self, engine: EngineConfig,
+                 platform: "PlatformConfig | None",
+                 tenants: "tuple[TenantSpec, ...]" = (),
+                 isolate_platform: bool = False):
+        self.engine = engine
+        self.platform_config = platform
+        self.tenants = tuple(tenants)
+        self.isolate_platform = isolate_platform
+        self.kv = ShardedKVStore(
+            n_shards=engine.n_kv_shards,
+            cost=engine.cost,
+            colocate_shards=engine.colocate_kv_shards,
+            counter_mode=engine.counter_mode,
+        )
+        self.clock = self.kv.clock
+        self.platform: "FaaSPlatform | None" = None
+        if platform is not None and not isolate_platform:
+            self.platform = self._new_platform()
+
+    def _new_platform(self) -> "FaaSPlatform":
+        from repro.platform import FaaSPlatform
+
+        p = FaaSPlatform(self.platform_config, self.engine.cost, self.clock)
+        for t in self.tenants:
+            p.configure_function(t.name, t.memory_mb)
+        return p
+
+    def job_substrate(self, job_name: str, tenant: str) -> JobSubstrate:
+        """The per-job view: namespaced KV, the shared platform (or a
+        fresh one per job in the isolated control arm), the tenant's
+        function identity."""
+        if self.platform is not None:
+            platform = self.platform
+        elif self.platform_config is not None:
+            platform = self._new_platform()  # isolated: private per job
+        else:
+            platform = None
+        return JobSubstrate(kv=self.kv.namespace(job_name),
+                            platform=platform, function=tenant)
+
+
+# ---------------------------------------------------------------------------
+# Orchestrator
+# ---------------------------------------------------------------------------
+
+
+def _default_engine_config() -> EngineConfig:
+    # Smaller per-job invoker pools and runtime cap than the single-job
+    # benchmarks: N of these run concurrently on one machine's threads.
+    return EngineConfig(num_initial_invokers=4, num_proxy_invokers=4,
+                        max_concurrency=512)
+
+
+def _default_platform_config() -> "PlatformConfig":
+    from repro.platform import PlatformConfig
+
+    return PlatformConfig()
+
+
+@dataclasses.dataclass(frozen=True)
+class OrchestratorConfig:
+    # Per-job engine knobs. ``engine.platform`` is ignored — the
+    # orchestrator owns platform construction (shared or per-job).
+    engine: EngineConfig = dataclasses.field(
+        default_factory=_default_engine_config)
+    # The account model. None = legacy stochastic draws (no pool, no
+    # billing) — still a valid multi-tenant data-plane study.
+    platform: "PlatformConfig | None" = dataclasses.field(
+        default_factory=_default_platform_config)
+    workload: WorkloadConfig = dataclasses.field(
+        default_factory=WorkloadConfig)
+    # Admission gate: how many jobs may run at once. The orchestrator's
+    # defense of the shared account cap — admitted jobs' fan-outs hit
+    # the throttle directly.
+    max_concurrent_jobs: int = 8
+    # Fair admission: pick the next job from the tenant with the fewest
+    # running jobs (FIFO within a tenant; FIFO across everything when
+    # off) so one flooding tenant cannot starve the others.
+    fair_admission: bool = True
+    # Control arm: per-job private platforms (no cross-job warm sharing,
+    # no shared cap) — the isolated-per-job baseline of fig15.
+    isolate_platform: bool = False
+
+
+@dataclasses.dataclass
+class OrchestratorReport:
+    mode: str                     # "shared" | "isolated"
+    jobs: int
+    completed: int
+    failed: int
+    makespan_s: float             # first arrival -> last completion
+    p50_s: float                  # job latency percentiles
+    p95_s: float                  # (arrival -> completion, completed jobs)
+    p99_s: float
+    mean_latency_s: float
+    mean_queue_wait_s: float      # arrival -> admission
+    warm_share: float             # warm_reuses / invocations with a pool
+    cold_starts: int
+    warm_reuses: int
+    throttle_events: int
+    peak_concurrency: int
+    billed_usd_total: float
+    per_tenant: "dict[str, dict[str, Any]]"
+    job_records: "list[dict[str, Any]]"
+
+
+def _percentile(sorted_vals: "list[float]", q: float) -> float:
+    """Nearest-rank percentile (deterministic, no interpolation)."""
+    if not sorted_vals:
+        return 0.0
+    rank = max(1, -(-len(sorted_vals) * q // 100))  # ceil(n*q/100)
+    return sorted_vals[int(rank) - 1]
+
+
+class JobOrchestrator:
+    """Runs a workload of DAG jobs on one shared substrate.
+
+    The orchestrator thread is the dispatcher actor: it feeds arrivals
+    from the (pre-sorted, seeded) workload, admits up to
+    ``max_concurrent_jobs`` with per-tenant fairness, and spawns each
+    admitted job as its own clock actor running
+    ``WukongEngine.compute(dag, substrate=...)``. Completions come back
+    on a clock queue. Under the virtual clock the whole traffic trace —
+    arrivals, queueing, contention, billing — is bit-identical across
+    runs."""
+
+    def __init__(self, config: OrchestratorConfig | None = None):
+        self.config = config or OrchestratorConfig()
+        self.last_substrate: Substrate | None = None
+        if self.config.engine.platform is not None:
+            raise ValueError(
+                "set OrchestratorConfig.platform, not engine.platform: "
+                "the orchestrator owns platform construction")
+
+    # -- admission policy ---------------------------------------------------
+    def _pick_next(self, ready: "list[JobRequest]",
+                   tenant_running: "dict[str, int]") -> JobRequest:
+        if not self.config.fair_admission:
+            return ready[0]  # plain FIFO
+        # Least-loaded tenant first; FIFO (arrival, id) within a load
+        # level — deterministic under ties.
+        return min(ready, key=lambda j: (tenant_running.get(j.tenant, 0),
+                                         j.arrival_ms, j.job_id))
+
+    # -- the run loop -------------------------------------------------------
+    def run(self, jobs: "list[JobRequest] | None" = None) -> OrchestratorReport:
+        cfg = self.config
+        if jobs is None:
+            jobs = generate_workload(cfg.workload)
+        substrate = Substrate(cfg.engine, cfg.platform,
+                              tenants=cfg.workload.tenants,
+                              isolate_platform=cfg.isolate_platform)
+        # Kept for introspection (tests, notebooks): the substrate the
+        # most recent run() executed on.
+        self.last_substrate = substrate
+        clock = substrate.clock
+        tenant_memory = {t.name: t.memory_mb for t in cfg.workload.tenants}
+
+        pending = deque(sorted(jobs, key=lambda j: (j.arrival_ms, j.job_id)))
+        ready: "list[JobRequest]" = []
+        tenant_running: "dict[str, int]" = {}
+        records: "list[dict[str, Any]]" = []
+        # isolated control arm: (tenant, private-platform snapshot) pairs
+        isolated_stats: "list[tuple[str, dict[str, Any]]]" = []
+        n_running = 0
+
+        with clock.actor():
+            done_q = clock.queue()
+
+            def launch(job: JobRequest) -> None:
+                admit_ms = clock.now_ms()
+                sub = substrate.job_substrate(job.name, job.tenant)
+
+                def runner() -> None:
+                    start_ms = clock.now_ms()
+                    rep, error = None, None
+                    try:
+                        engine = WukongEngine(cfg.engine)
+                        rep = engine.compute(job.build_dag(), substrate=sub)
+                    except Exception as exc:  # JobError, task bugs: record
+                        error = repr(exc)
+                    done_q.put((job, admit_ms, start_ms, clock.now_ms(),
+                                rep, error, sub))
+
+                clock.spawn(runner, name=job.name)
+
+            while len(records) < len(jobs):
+                now = clock.now_ms()
+                while pending and pending[0].arrival_ms <= now:
+                    ready.append(pending.popleft())
+                while ready and n_running < cfg.max_concurrent_jobs:
+                    job = self._pick_next(ready, tenant_running)
+                    ready.remove(job)
+                    tenant_running[job.tenant] = (
+                        tenant_running.get(job.tenant, 0) + 1)
+                    n_running += 1
+                    launch(job)
+                try:
+                    if pending:
+                        wait_s = (pending[0].arrival_ms - clock.now_ms()) / 1e3
+                        msg = done_q.get(timeout=max(0.0, wait_s))
+                    else:
+                        msg = done_q.get()
+                except _queue.Empty:
+                    continue  # an arrival came due
+                job, admit_ms, start_ms, end_ms, rep, error, sub = msg
+                tenant_running[job.tenant] -= 1
+                n_running -= 1
+                rec: "dict[str, Any]" = {
+                    "job_id": job.job_id,
+                    "tenant": job.tenant,
+                    "app": job.app,
+                    "size": job.size,
+                    "arrival_ms": job.arrival_ms,
+                    "admit_ms": admit_ms,
+                    "end_ms": end_ms,
+                    "latency_s": (end_ms - job.arrival_ms) / 1e3,
+                    "queue_wait_s": (admit_ms - job.arrival_ms) / 1e3,
+                    "error": error,
+                }
+                if rep is not None:
+                    rec["tasks"] = rep.tasks
+                    rec["executors"] = rep.executors_invoked
+                if cfg.isolate_platform and sub.platform is not None:
+                    # Private platform: its counters ARE this job's.
+                    isolated_stats.append(
+                        (job.tenant, sub.platform.snapshot()))
+                records.append(rec)
+                # Reclaim the finished job's namespaced objects/counters
+                # from the shared store: memory stays O(concurrent
+                # jobs), not O(total traffic). Host-side (no clock
+                # charge); any straggler residue is bounded by the
+                # job's stop signal.
+                sub.kv.purge()
+
+            # All jobs done; counters are stable (we hold the run token).
+            report = self._reduce(jobs, records, substrate, tenant_memory,
+                                  isolated_stats)
+        return report
+
+    # -- report reduction ---------------------------------------------------
+    def _reduce(self, jobs, records, substrate, tenant_memory,
+                isolated_stats) -> OrchestratorReport:
+        cfg = self.config
+        records = sorted(records, key=lambda r: r["job_id"])
+        ok = [r for r in records if r["error"] is None]
+        latencies = sorted(r["latency_s"] for r in ok)
+        first_arrival = min((j.arrival_ms for j in jobs), default=0.0)
+        last_end = max((r["end_ms"] for r in records), default=0.0)
+
+        # -- platform totals + per-tenant billing ---------------------------
+        cold = warm = throttled = peak = 0
+        billed_total = 0.0
+        tenant_billed: "dict[str, float]" = {}
+        if substrate.platform is not None:          # shared account
+            snap = substrate.platform.snapshot()
+            cold, warm = snap["cold_starts"], snap["warm_reuses"]
+            throttled = snap["throttle_events"]
+            peak = snap["peak_concurrency"]
+            billed_total = snap["billed_usd"]
+            for tenant, block in snap.get("billing_by_function",
+                                          {}).items():
+                tenant_billed[tenant] = block["billed_usd"]
+        else:                                        # isolated control arm
+            for tenant, snap in isolated_stats:
+                cold += snap["cold_starts"]
+                warm += snap["warm_reuses"]
+                throttled += snap["throttle_events"]
+                peak = max(peak, snap["peak_concurrency"])
+                billed_total += snap["billed_usd"]
+                tenant_billed[tenant] = (
+                    tenant_billed.get(tenant, 0.0) + snap["billed_usd"])
+
+        per_tenant: "dict[str, dict[str, Any]]" = {}
+        for tenant in sorted({j.tenant for j in jobs}):
+            t_recs = [r for r in records if r["tenant"] == tenant]
+            t_ok = [r for r in t_recs if r["error"] is None]
+            lat = sorted(r["latency_s"] for r in t_ok)
+            per_tenant[tenant] = {
+                "jobs": len(t_recs),
+                "failed": len(t_recs) - len(t_ok),
+                "memory_mb": tenant_memory.get(tenant),
+                "billed_usd": tenant_billed.get(tenant, 0.0),
+                "p50_s": _percentile(lat, 50),
+                "mean_latency_s": sum(lat) / len(lat) if lat else 0.0,
+            }
+
+        invocations = cold + warm
+        return OrchestratorReport(
+            mode="isolated" if cfg.isolate_platform else "shared",
+            jobs=len(jobs),
+            completed=len(ok),
+            failed=len(records) - len(ok),
+            makespan_s=(last_end - first_arrival) / 1e3,
+            p50_s=_percentile(latencies, 50),
+            p95_s=_percentile(latencies, 95),
+            p99_s=_percentile(latencies, 99),
+            mean_latency_s=(sum(latencies) / len(latencies)
+                            if latencies else 0.0),
+            mean_queue_wait_s=(sum(r["queue_wait_s"] for r in ok) / len(ok)
+                               if ok else 0.0),
+            warm_share=warm / invocations if invocations else 0.0,
+            cold_starts=cold,
+            warm_reuses=warm,
+            throttle_events=throttled,
+            peak_concurrency=peak,
+            billed_usd_total=billed_total,
+            per_tenant=per_tenant,
+            job_records=records,
+        )

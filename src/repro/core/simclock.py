@@ -574,6 +574,13 @@ class VirtualQueue:
         with self._clock._mutex:
             return not self._items
 
+    def drain(self) -> "list[Any]":
+        """Atomically remove and return every queued item (pool shutdown
+        with ``cancel_futures``: queued-but-unstarted work is dropped)."""
+        with self._clock._mutex:
+            items, self._items = self._items, []
+            return items
+
 
 class VirtualLock:
     """Transfer-lane lock held across simulated transfers. FIFO handoff:
@@ -726,6 +733,14 @@ class VirtualPool:
                 return
             self._closed = True
             n = self._workers
+        if cancel_futures:
+            # Drop queued-but-unstarted bodies (matching the
+            # ThreadPoolExecutor contract the realtime pool inherits).
+            # Before this, a torn-down job's queued executors still ran
+            # to completion behind the shutdown sentinels — harmless when
+            # the substrate died with the job, a capacity leak once
+            # platform and store outlive it.
+            self._q.drain()
         for _ in range(n):
             self._q.put(None)
 

@@ -10,7 +10,13 @@ across clock modes* — the cross-check tests rely on this. Like AWS,
 the cold-start provisioning delay and the invoke API latency are not
 billed as duration.
 
-The snapshot sums per-invocation GB-seconds in sorted order so the
+Multi-tenancy: each invocation is recorded against a ``key`` (the
+platform function name — one per tenant under the orchestrator) with
+that function's memory size, so one shared account meter can answer
+"what does tenant T owe" (``per_key_snapshot``) as well as "what does
+the account owe" (``snapshot``).
+
+Snapshots sum per-invocation GB-seconds in sorted record order so the
 total is independent of the (thread-racy, in real-time mode) order in
 which invocations complete.
 """
@@ -25,22 +31,29 @@ class BillingMeter:
     def __init__(self, config: PlatformConfig):
         self.config = config
         self._lock = threading.Lock()
-        self._billed_ms: list[float] = []  # one entry per invocation
+        # one (key, billed_ms, memory_mb) record per invocation
+        self._records: list[tuple[str, float, int]] = []
 
-    def add_invocation(self, duration_ms: float) -> float:
-        """Record one finished invocation; returns its billed ms."""
+    def add_invocation(self, duration_ms: float, memory_mb: int | None = None,
+                       key: str = "executor") -> float:
+        """Record one finished invocation; returns its billed ms.
+        ``memory_mb`` defaults to the account-wide config size (the
+        platform passes the invoked function's own size)."""
         billed = self.config.billed_ms(duration_ms)
+        mem = int(memory_mb) if memory_mb else self.config.memory_mb
         with self._lock:
-            self._billed_ms.append(billed)
+            self._records.append((key, billed, mem))
         return billed
 
-    def snapshot(self) -> dict[str, float]:
+    @staticmethod
+    def _gb_s(billed_ms: float, memory_mb: int) -> float:
+        return (memory_mb / 1024.0) * (billed_ms / 1e3)
+
+    def _totals(self, records: "list[tuple[str, float, int]]") -> dict[str, float]:
         cfg = self.config
-        with self._lock:
-            billed = sorted(self._billed_ms)
-        total_ms = sum(billed)
-        gb_s = sum(cfg.gb_s(ms) for ms in billed)
-        requests = len(billed)
+        total_ms = sum(ms for _, ms, _ in records)
+        gb_s = sum(self._gb_s(ms, mem) for _, ms, mem in records)
+        requests = len(records)
         usd = (requests * cfg.price_per_request_usd
                + gb_s * cfg.price_per_gb_s_usd)
         return {
@@ -49,3 +62,19 @@ class BillingMeter:
             "billed_gb_s": gb_s,
             "billed_usd": usd,
         }
+
+    def snapshot(self) -> dict[str, float]:
+        with self._lock:
+            records = sorted(self._records)
+        return self._totals(records)
+
+    def per_key_snapshot(self) -> "dict[str, dict[str, float]]":
+        """Account totals broken down by billing key (tenant function):
+        key -> the same block ``snapshot`` returns. Freshly built on
+        every call — callers may mutate the result freely."""
+        with self._lock:
+            records = sorted(self._records)
+        by_key: dict[str, list[tuple[str, float, int]]] = {}
+        for rec in records:
+            by_key.setdefault(rec[0], []).append(rec)
+        return {key: self._totals(recs) for key, recs in by_key.items()}

@@ -72,8 +72,39 @@ class FaaSPlatform:
         self.pool = ContainerPool(config, clock)
         self.throttle = ConcurrencyThrottle(config, clock)
         self.meter = BillingMeter(config)
+        # Per-function memory overrides (multi-tenant: one function per
+        # tenant, each with its own memory size -> its own billing rate
+        # and compute speed). Unregistered functions use the account
+        # default ``config.memory_mb``.
+        self._fn_memory: dict[str, int] = {}
+        self._configured: set[str] = set()
         if config.prewarm > 0:
             self.pool.prewarm(DEFAULT_FUNCTION, config.prewarm)
+
+    # -- multi-tenant function registry -------------------------------------
+    def configure_function(self, function: str,
+                           memory_mb: int | None = None) -> None:
+        """Declare a deployed function (a tenant, under the
+        orchestrator) with its own memory size. Warm containers are
+        already pooled per function name, so tenants share the account
+        cap and billing meter but never each other's containers.
+
+        ``config.prewarm`` applies per deployed function: the pool is
+        keyed by function name, so warming only the default function
+        would leave every tenant's first invocations cold and the knob
+        silently ineffective in multi-tenant runs."""
+        if memory_mb is not None:
+            if memory_mb <= 0:
+                raise ValueError("memory_mb must be positive")
+            self._fn_memory[function] = int(memory_mb)
+        if (self.config.prewarm > 0 and function != DEFAULT_FUNCTION
+                and function not in self._configured):
+            # once per function: reconfiguring must not re-warm
+            self.pool.prewarm(function, self.config.prewarm)
+        self._configured.add(function)
+
+    def memory_mb(self, function: str = DEFAULT_FUNCTION) -> int:
+        return self._fn_memory.get(function, self.config.memory_mb)
 
     # -- invocation protocol (driven by the invoker lane) -------------------
     def try_reserve(self) -> bool:
@@ -91,13 +122,16 @@ class FaaSPlatform:
         duration, then return the container to the warm pool and free
         the concurrency slot."""
 
+        memory_mb = self.memory_mb(function)
+
         def invocation() -> None:
             acc = [0.0]
             try:
                 with charge_meter(acc):
                     body()
             finally:
-                self.meter.add_invocation(acc[0])
+                self.meter.add_invocation(acc[0], memory_mb=memory_mb,
+                                          key=function)
                 self.pool.release(function, container_id)
                 self.throttle.release()
 
@@ -110,14 +144,21 @@ class FaaSPlatform:
         self.throttle.release()
 
     # -- compute scaling ----------------------------------------------------
-    def compute_clock(self, clock: BaseClock) -> Any:
-        scale = self.config.compute_scale
+    def compute_clock(self, clock: BaseClock,
+                      function: str = DEFAULT_FUNCTION) -> Any:
+        """Task clock for ``function``: CPU share proportional to ITS
+        memory size (per-tenant under the orchestrator)."""
+        scale = self.config.baseline_memory_mb / self.memory_mb(function)
         if scale == 1.0:
             return clock
         return ComputeScaledClock(clock, scale)
 
     # -- reporting ----------------------------------------------------------
     def snapshot(self) -> dict[str, Any]:
+        """Current platform counters. CONTRACT: the returned dict (and
+        everything nested in it) is freshly built per call — callers
+        (JobReports, the orchestrator) may extend or mutate it without
+        aliasing any other snapshot or platform internals."""
         out: dict[str, Any] = {
             "mode": "pool",
             "memory_mb": self.config.memory_mb,
@@ -129,4 +170,8 @@ class FaaSPlatform:
             "peak_concurrency": self.throttle.peak_concurrency,
         }
         out.update(self.meter.snapshot())
+        if self._fn_memory:
+            # Multi-tenant deployments: the account bill broken down by
+            # tenant function (fresh nested dicts, same aliasing contract).
+            out["billing_by_function"] = self.meter.per_key_snapshot()
         return out
