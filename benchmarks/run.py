@@ -11,9 +11,11 @@ bit-identical across runs. Setting ``REPRO_SIM_SCALE > 0`` re-enables
 the seed real-time mode (simulated latencies really sleep) for
 cross-checks. Problem-size knobs: ``--quick`` (smaller sizes) and
 ``--smoke`` (toy sizes; a CI regression gate that executes every
-figure's engines end-to-end in seconds, plus a data-plane gate and a
+figure's engines end-to-end in seconds, plus a data-plane gate, a
 virtual-clock gate asserting determinism and the >=10x wall-time
-speedup over the seed SIM_SCALE=0.1 real-time path).
+speedup over the seed SIM_SCALE=0.1 real-time path, and the fig16
+scale gate asserting the event-driven substrate's >=5x speedup over
+the thread-per-actor cross-check mode and the 10^5-task wall budget).
 """
 from __future__ import annotations
 
@@ -289,6 +291,7 @@ def main() -> None:
         fig13_task_cdf,
         fig14_platform,
         fig15_multitenant,
+        fig16_scaling,
     )
     from benchmarks import common
 
@@ -339,6 +342,15 @@ def main() -> None:
                   dict(n_jobs=64, rates=(2.0, 8.0), tenant_counts=(2, 4),
                        max_concurrent_jobs=32),
                   dict()),
+        # The substrate scaling curve (PR 6). Smoke = the CI gate tiers
+        # (>= 5x substrate speedup at 4096 leaves, 10^5 engine tasks
+        # < 30 s); full adds the 10^6-task event-only tier.
+        "fig16": (fig16_scaling.run,
+                  dict(),
+                  dict(),
+                  dict(micro_leaves=(1024, 4096, 16384),
+                       engine_tiers=((8192, True), (131072, False),
+                                     (1 << 20, False)))),
     }
     mode = 0 if args.smoke else (1 if args.quick else 2)
     only = set(args.only.split(",")) if args.only else None
@@ -363,6 +375,12 @@ def main() -> None:
             for name, rows in rows_by_fig.items()
         },
     }
+    if "fig16" in rows_by_fig:
+        # tasks vs host wall seconds, both substrates where feasible —
+        # the PR 6 acceptance record (fig16's wall_s is HOST seconds,
+        # unlike the simulated wall_s of every other figure).
+        snapshot["scaling_curve"] = fig16_scaling.scaling_curve(
+            rows_by_fig["fig16"])
     if only is None:
         # The trajectory's real-time leg costs ~12 s of genuine sleeping;
         # skip it when a dev is iterating on a single figure via --only.
@@ -377,6 +395,8 @@ def main() -> None:
         _check_dataplane_gate(rows_by_fig)
         _check_platform_gate(rows_by_fig, figs["fig14"][1])
         _check_multitenant_gate(rows_by_fig, figs["fig15"][1])
+        if "fig16" in rows_by_fig:
+            fig16_scaling.check_gates(rows_by_fig["fig16"])
 
 
 if __name__ == "__main__":

@@ -37,10 +37,14 @@ from repro.core.optimize import (
 )
 from repro.core.schedule import StaticSchedule, generate_static_schedules
 from repro.core.simclock import (
+    EventClock,
     RealtimeClock,
     VirtualClock,
     clock_for_scale,
+    drain_worker_cache,
+    run_effects,
     simulated_compute,
+    worker_cache_size,
 )
 
 
@@ -69,6 +73,8 @@ __all__ = [
     "StaticSchedule", "generate_static_schedules",
     "OptimizeConfig", "CompiledDAG", "PassStats", "compile_dag",
     "ALL_PASSES", "NO_PASSES",
-    "VirtualClock", "RealtimeClock", "clock_for_scale", "simulated_compute",
+    "EventClock", "VirtualClock", "RealtimeClock", "clock_for_scale",
+    "run_effects", "drain_worker_cache", "worker_cache_size",
+    "simulated_compute",
     "PlatformConfig", "FaaSPlatform",
 ]

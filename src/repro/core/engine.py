@@ -30,7 +30,6 @@ cross-checks.
 """
 from __future__ import annotations
 
-import contextlib
 import dataclasses
 import queue
 import threading
@@ -48,7 +47,7 @@ from repro.core.invoker import FanoutProxy, InvokerPool
 from repro.core.kvstore import CostModel, ShardedKVStore, sizeof
 from repro.core.optimize import OptimizeConfig, PassStats, ensure_compiled
 from repro.core.schedule import generate_static_schedules
-from repro.core.simclock import task_clock
+from repro.core.simclock import run_effects, task_clock
 
 if TYPE_CHECKING:  # import cycle: repro.platform imports repro.core
     from repro.platform import FaaSPlatform, PlatformConfig
@@ -105,18 +104,6 @@ class JobSubstrate:
     function: str = "executor"
 
 
-def _enter_actor(clock) -> Any:
-    """Engine-side actor registration. Self-contained jobs register the
-    calling thread as the job's scheduler actor; a job launched by the
-    orchestrator arrives on a thread that is ALREADY an actor of the
-    shared clock (spawned via ``clock.spawn``), and re-registering would
-    corrupt the scheduler's actor table — so this becomes a no-op."""
-    current = getattr(clock, "_current", None)
-    if current is not None and current() is not None:
-        return contextlib.nullcontext()
-    return clock.actor()
-
-
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
     cost: CostModel = dataclasses.field(default_factory=CostModel)
@@ -151,6 +138,9 @@ class EngineConfig:
     # ramp, and a billing meter. None = the legacy memoryless
     # ``warm_fraction`` draw (kept for cross-checks).
     platform: PlatformConfig | None = None
+    # Per-task metrics records cost ~2.5 dicts/task of memory; million-task
+    # scaling runs switch them off (charged_ms/kv_stats are unaffected).
+    record_metrics: bool = True
 
 
 @dataclasses.dataclass
@@ -213,7 +203,7 @@ class _ResultWaiter:
         fan-out slowdown) once the substrate outlives jobs."""
         self.kv.unsubscribe(RESULTS_CHANNEL, self.sub)
 
-    def wait(self, timeout_s: float) -> dict[str, Any]:
+    def wait_g(self, timeout_s: float):
         clock = self.kv.clock
         done: set[str] = set()
         deadline = clock.now_ms() + timeout_s * 1e3
@@ -224,14 +214,20 @@ class _ResultWaiter:
                     f"job timed out; missing roots: {sorted(self.roots - done)}"
                 )
             try:
-                msg = self.sub.get(timeout=remaining_ms / 1e3)
+                msg = yield ("get", self.sub, remaining_ms / 1e3)
             except queue.Empty:
                 continue
             if msg["type"] == "error":
                 raise JobError(f"task {msg['key']!r} failed: {msg['error']}")
             if msg["key"] in self.roots:
                 done.add(msg["key"])
-        return {k: self.kv.get(k) for k in sorted(self.roots)}
+        results: dict[str, Any] = {}
+        for k in sorted(self.roots):
+            results[k] = yield from self.kv.get_g(k)
+        return results
+
+    def wait(self, timeout_s: float) -> dict[str, Any]:
+        return run_effects(self.kv.clock, self.wait_g(timeout_s))
 
 
 class WukongEngine:
@@ -242,6 +238,12 @@ class WukongEngine:
 
     def compute(self, dag: DAG,
                 substrate: JobSubstrate | None = None) -> JobReport:
+        """Run the job to completion on the engine clock.
+
+        The job body is an effect generator (``compute_g``); the clock's
+        ``run`` drives it — as the root continuation of the event loop on
+        the event substrate, or inline on the calling (actor) thread on
+        the thread/realtime substrates."""
         cfg = self.config
         # DAG compiler: rewrite/annotate before any schedule is generated.
         # Host-side work (compilation, schedule generation) happens before
@@ -256,156 +258,162 @@ class WukongEngine:
             )
         else:
             kv = substrate.kv
+        return kv.clock.run(self._compute_g(dag, kv, substrate))
+
+    def compute_g(self, dag: DAG, substrate: JobSubstrate):
+        """The job as an effect generator, for composition inside an
+        already-running substrate (the orchestrator's job runners do
+        ``yield from engine.compute_g(dag, substrate)``)."""
+        dag = ensure_compiled(dag, self.config.optimize)
+        return (yield from self._compute_g(dag, substrate.kv, substrate))
+
+    def _compute_g(self, dag: DAG, kv: Any, substrate: JobSubstrate | None):
+        cfg = self.config
         function = substrate.function if substrate is not None else "executor"
         clock = kv.clock
         schedule_set = generate_static_schedules(dag)
-        # The scheduler (this thread) is the first clock actor; every
-        # other actor (invoker lanes, runtime workers, proxy, monitor) is
-        # spawned through the clock so virtual time can only advance when
-        # all of them are quiescent. (On an injected substrate the caller
-        # already runs as an actor of the shared clock — see
-        # ``_enter_actor``.)
-        with _enter_actor(clock):
-            # On a shared substrate the clock's cumulative charge counter
-            # does not restart per job: report the delta. (With jobs from
-            # OTHER tenants charging the same clock concurrently, the
-            # per-job delta includes their charges too — per-tenant money
-            # accounting goes through the platform's billing meter, which
-            # meters per invocation thread and is exact.)
-            charged0 = clock.charged_ms
-            # Storage Manager registers the fan-in counters at workflow
-            # start — in ONE batched round trip (Lambada-style request
-            # batching), or one per counter when the factor is ablated.
-            counters = schedule_set.fan_in_counters()
-            if cfg.batch_kv_round_trips:
-                kv.register_counters(counters)
+        # On a shared substrate the clock's cumulative charge counter
+        # does not restart per job: report the delta. (With jobs from
+        # OTHER tenants charging the same clock concurrently, the
+        # per-job delta includes their charges too — per-tenant money
+        # accounting goes through the platform's billing meter, which
+        # meters per invocation body and is exact.)
+        charged0 = clock.charged_ms
+        # Storage Manager registers the fan-in counters at workflow
+        # start — in ONE batched round trip (Lambada-style request
+        # batching), or one per counter when the factor is ablated.
+        counters = schedule_set.fan_in_counters()
+        if cfg.batch_kv_round_trips:
+            yield from kv.register_counters_g(counters)
+        else:
+            for cid, width in counters.items():
+                yield from kv.register_counter_g(cid, width)
+
+        metrics = TaskMetrics(clock, enabled=cfg.record_metrics)
+        heartbeats = HeartbeatRegistry()
+        faults = FaultInjector(cfg.faults)
+        pool = clock.pool(cfg.max_concurrency)
+        # Self-contained: one platform instance per job (initial and
+        # proxy invokers share the cap and container pool). Injected:
+        # the SHARED platform — this job contends with every other
+        # job on the substrate.
+        if substrate is not None:
+            platform = substrate.platform
+        else:
+            platform = _make_platform(cfg.platform, cfg.cost, clock)
+        initial_invokers = InvokerPool(
+            cfg.num_initial_invokers, cfg.cost, clock, pool, name="init",
+            platform=platform, function=function,
+        )
+        proxy_invokers = InvokerPool(
+            cfg.num_proxy_invokers, cfg.cost, clock, pool, name="proxy",
+            platform=platform, function=function,
+        )
+        proxy = FanoutProxy(kv, proxy_invokers) if cfg.use_proxy else None
+        # Per-job stop signal: set at teardown (success OR failure)
+        # and checked by executors at task boundaries and by spawn
+        # below, so an abandoned job's in-flight work winds down
+        # instead of consuming shared capacity.
+        stop_job = clock.event()
+
+        ctx: ExecutorContext | None = None
+
+        def spawn(start_key, seed_cache, schedule, width, attempt=0,
+                  parent=None):
+            # Effect generator: spawn charges nothing itself, but the
+            # proxy path publishes (a charged KV operation).
+            assert ctx is not None
+            if stop_job.is_set():
+                return  # dead job: drop late retries/speculation
+            ship_ms = schedule.code_size_bytes / (
+                cfg.cost.schedule_ship_mbps * 1e6
+            ) * 1e3
+            body = _executor_body(ctx, schedule, start_key, seed_cache,
+                                  attempt, parent)
+            if proxy is not None and width >= cfg.proxy_threshold:
+                # Large fan-out: one pub/sub message offloads all the
+                # invocations to the proxy's parallel invoker pool.
+                yield from kv.publish_g(FanoutProxy.CHANNEL,
+                                        {"spawns": [body]})
             else:
-                for cid, width in counters.items():
-                    kv.register_counter(cid, width)
+                initial_invokers.submit(body, extra_ms=ship_ms)
 
-            metrics = TaskMetrics(clock)
-            heartbeats = HeartbeatRegistry()
-            faults = FaultInjector(cfg.faults)
-            pool = clock.pool(cfg.max_concurrency)
-            # Self-contained: one platform instance per job (initial and
-            # proxy invokers share the cap and container pool). Injected:
-            # the SHARED platform — this job contends with every other
-            # job on the substrate.
-            if substrate is not None:
-                platform = substrate.platform
-            else:
-                platform = _make_platform(cfg.platform, cfg.cost, clock)
-            initial_invokers = InvokerPool(
-                cfg.num_initial_invokers, cfg.cost, clock, pool, name="init",
-                platform=platform, function=function,
-            )
-            proxy_invokers = InvokerPool(
-                cfg.num_proxy_invokers, cfg.cost, clock, pool, name="proxy",
-                platform=platform, function=function,
-            )
-            proxy = FanoutProxy(kv, proxy_invokers) if cfg.use_proxy else None
-            # Per-job stop signal: set at teardown (success OR failure)
-            # and checked by executors at task boundaries and by spawn
-            # below, so an abandoned job's in-flight work winds down
-            # instead of consuming shared capacity.
-            stop_job = clock.event()
+        ctx = ExecutorContext(
+            dag=dag,
+            kv=kv,
+            spawn=spawn,
+            faults=faults,
+            heartbeats=heartbeats,
+            metrics=metrics,
+            inline_fanout_args=cfg.inline_fanout_args,
+            coalesce_batch=getattr(dag, "coalesce_batch", 0),
+            batch_kv_round_trips=cfg.batch_kv_round_trips,
+            compute_clock=(platform.compute_clock(clock, function)
+                           if platform is not None else None),
+            stop=stop_job,
+        )
 
-            ctx: ExecutorContext | None = None
+        waiter = _ResultWaiter(kv, dag.roots)
+        t0_ms = clock.now_ms()
+        # Metric stamps are relative to the job's t0 (the clock is
+        # shared and does not restart per job).
+        metrics.origin_ms = t0_ms
+        # Initial Task Executor Invokers: one executor per start batch
+        # — one batch per static schedule (paper §IV-C), or fewer when
+        # the coalescing pass grouped sibling leaves.
+        for keys, sched in schedule_set.batches:
+            yield from spawn(keys, {}, sched, width=1)
 
-            def spawn(start_key, seed_cache, schedule, width, attempt=0,
-                      parent=None):
-                assert ctx is not None
-                if stop_job.is_set():
-                    return  # dead job: drop late retries/speculation
-                ship_ms = schedule.code_size_bytes / (
-                    cfg.cost.schedule_ship_mbps * 1e6
-                ) * 1e3
-                body = _executor_body(ctx, schedule, start_key, seed_cache,
-                                      attempt, parent)
-                if proxy is not None and width >= cfg.proxy_threshold:
-                    # Large fan-out: one pub/sub message offloads all the
-                    # invocations to the proxy's parallel invoker pool.
-                    kv.publish(FanoutProxy.CHANNEL, {"spawns": [body]})
-                else:
-                    initial_invokers.submit(body, extra_ms=ship_ms)
-
-            ctx = ExecutorContext(
-                dag=dag,
-                kv=kv,
-                spawn=spawn,
-                faults=faults,
-                heartbeats=heartbeats,
-                metrics=metrics,
-                inline_fanout_args=cfg.inline_fanout_args,
-                coalesce_batch=getattr(dag, "coalesce_batch", 0),
-                batch_kv_round_trips=cfg.batch_kv_round_trips,
-                compute_clock=(platform.compute_clock(clock, function)
-                               if platform is not None else None),
-                stop=stop_job,
-            )
-
-            waiter = _ResultWaiter(kv, dag.roots)
-            t0_ms = clock.now_ms()
-            # Metric stamps are relative to the job's t0 (the clock is
-            # shared and does not restart per job).
-            metrics.origin_ms = t0_ms
-            # Initial Task Executor Invokers: one executor per start batch
-            # — one batch per static schedule (paper §IV-C), or fewer when
-            # the coalescing pass grouped sibling leaves.
-            for keys, sched in schedule_set.batches:
-                spawn(keys, {}, sched, width=1)
-
-            stop_monitor = clock.event()
-            clock.spawn(
-                lambda: _speculative_monitor(
-                    ctx, stop_monitor, cfg, schedule_set, clock),
-                name="spec-monitor",
-            )
-            try:
-                results = waiter.wait(cfg.job_timeout_s)
-            finally:
-                stop_job.set()
-                stop_monitor.set()
-                initial_invokers.close()
-                proxy_invokers.close()
-                if proxy is not None:
-                    proxy.close()
-                waiter.close()
-                # Platform mode: queued-but-unstarted bodies are WRAPPED
-                # invocations already holding a concurrency slot and a
-                # container (reserved by the invoker lane); cancelling
-                # them would leak both into the shared account forever.
-                # They must run — the stop signal makes each return at
-                # its first task boundary, and the wrapper's finally
-                # releases the reservation. Without a platform nothing
-                # is reserved, so queued bodies are safely dropped.
-                pool.shutdown(wait=False, cancel_futures=platform is None)
-            wall = (clock.now_ms() - t0_ms) / 1e3
-            # Snapshot every counter INSIDE the actor block: the run
-            # token serializes this read against any still-draining
-            # leftover work (late retries/speculative duplicates), so
-            # the report is deterministic; outside the block those
-            # actors run OS-concurrently with us.
-            report = JobReport(
-                results=results,
-                wall_s=wall,
-                tasks=len(dag),
-                executors_invoked=initial_invokers.invocations
-                + proxy_invokers.invocations,
-                kv_stats=kv.stats.snapshot(),
-                metrics=list(metrics.records),
-                charged_ms=clock.charged_ms - charged0,
-                optimizer=getattr(dag, "pass_stats", ()),
-                platform_stats=_platform_stats(
-                    platform, [initial_invokers, proxy_invokers]),
-            )
+        stop_monitor = clock.event()
+        clock.spawn(
+            lambda: _speculative_monitor(
+                ctx, stop_monitor, cfg, schedule_set, clock),
+            name="spec-monitor",
+        )
+        try:
+            results = yield from waiter.wait_g(cfg.job_timeout_s)
+        finally:
+            stop_job.set()
+            stop_monitor.set()
+            initial_invokers.close()
+            proxy_invokers.close()
+            if proxy is not None:
+                yield from proxy.close_g()
+            waiter.close()
+            # Platform mode: queued-but-unstarted bodies are WRAPPED
+            # invocations already holding a concurrency slot and a
+            # container (reserved by the invoker lane); cancelling
+            # them would leak both into the shared account forever.
+            # They must run — the stop signal makes each return at
+            # its first task boundary, and the wrapper's finally
+            # releases the reservation. Without a platform nothing
+            # is reserved, so queued bodies are safely dropped.
+            pool.shutdown(wait=False, cancel_futures=platform is None)
+        wall = (clock.now_ms() - t0_ms) / 1e3
+        # Snapshot every counter while still inside the job generator:
+        # the substrate serializes this read against any still-draining
+        # leftover work (late retries/speculative duplicates), so the
+        # report is deterministic.
+        report = JobReport(
+            results=results,
+            wall_s=wall,
+            tasks=len(dag),
+            executors_invoked=initial_invokers.invocations
+            + proxy_invokers.invocations,
+            kv_stats=kv.stats.snapshot(),
+            metrics=list(metrics.records),
+            charged_ms=clock.charged_ms - charged0,
+            optimizer=getattr(dag, "pass_stats", ()),
+            platform_stats=_platform_stats(
+                platform, [initial_invokers, proxy_invokers]),
+        )
         return report
 
 
 def _executor_body(ctx, schedule, start_key, seed_cache, attempt, parent=None):
     def body():
-        TaskExecutor(ctx, schedule, start_key, seed_cache, attempt,
-                     parent=parent).run()
+        return TaskExecutor(ctx, schedule, start_key, seed_cache, attempt,
+                            parent=parent).run_g()
 
     return body
 
@@ -421,7 +429,10 @@ def _speculative_monitor(ctx, stop, cfg, schedule_set, clock):
     if threshold_ms == float("inf"):
         return
     respawned: set[int] = set()
-    while not stop.wait(cfg.speculative_poll_s):
+    while True:
+        flag = yield ("wait", stop, cfg.speculative_poll_s)
+        if flag:
+            return
         now_ms = clock.now_ms()
         for hb in ctx.heartbeats.inflight():
             age_ms = now_ms - hb.started_at
@@ -436,8 +447,8 @@ def _speculative_monitor(ctx, stop, cfg, schedule_set, clock):
                 for key in hb.start_keys or (hb.start_key,):
                     sched = schedule_set.covering_schedule(key)
                     if sched is not None:
-                        ctx.spawn(key, {}, sched, width=1,
-                                  attempt=1, parent=hb.parent)
+                        yield from ctx.spawn(key, {}, sched, width=1,
+                                             attempt=1, parent=hb.parent)
 
 
 # ---------------------------------------------------------------------------
@@ -461,6 +472,7 @@ class CentralizedConfig:
     optimize: OptimizeConfig | None = None
     # Stateful FaaS platform model; None = legacy stochastic draw.
     platform: PlatformConfig | None = None
+    record_metrics: bool = True    # off for million-task scaling runs
 
 
 class _CentralizedEngine:
@@ -484,120 +496,136 @@ class _CentralizedEngine:
             )
         else:
             kv = substrate.kv
+        return kv.clock.run(self._compute_g(dag, kv, substrate))
+
+    def compute_g(self, dag: DAG, substrate: JobSubstrate):
+        dag = ensure_compiled(dag, self.config.optimize)
+        return (yield from self._compute_g(dag, substrate.kv, substrate))
+
+    def _compute_g(self, dag: DAG, kv: Any, substrate: JobSubstrate | None):
+        cfg = self.config
         function = substrate.function if substrate is not None else "executor"
         clock = kv.clock
-        with _enter_actor(clock):
-            charged0 = clock.charged_ms
-            metrics = TaskMetrics(clock)
-            pool = clock.pool(cfg.max_concurrency)
-            if substrate is not None:
-                platform = substrate.platform
-            else:
-                platform = _make_platform(cfg.platform, cfg.cost, clock)
-            invokers = InvokerPool(cfg.num_invokers, cfg.cost, clock, pool,
-                                   platform=platform, function=function)
-            compute_clock = (platform.compute_clock(clock, function)
-                             if platform is not None else clock)
-            done_q = clock.queue()
-            inflight = [0]
-            inflight_lock = threading.Lock()
+        charged0 = clock.charged_ms
+        metrics = TaskMetrics(clock, enabled=cfg.record_metrics)
+        pool = clock.pool(cfg.max_concurrency)
+        if substrate is not None:
+            platform = substrate.platform
+        else:
+            platform = _make_platform(cfg.platform, cfg.cost, clock)
+        invokers = InvokerPool(cfg.num_invokers, cfg.cost, clock, pool,
+                               platform=platform, function=function)
+        compute_clock = (platform.compute_clock(clock, function)
+                         if platform is not None else clock)
+        done_q = clock.queue()
+        inflight = [0]
+        inflight_lock = threading.Lock()
 
-            # Scheduler-side message handling is serialized (the §III-B
-            # bottleneck). TCP mode additionally pays a per-connection
-            # setup and an IRQ-flood term that grows with the number of
-            # Lambdas holding open connections (paper §III-C) — the reason
-            # pub/sub pulls ahead as tasks get longer and waves of
-            # completions pile up.
-            def per_msg_ms() -> float:
-                if cfg.notification != "tcp":
-                    return cfg.cost.pubsub_msg_ms
+        # Scheduler-side message handling is serialized (the §III-B
+        # bottleneck). TCP mode additionally pays a per-connection
+        # setup and an IRQ-flood term that grows with the number of
+        # Lambdas holding open connections (paper §III-C) — the reason
+        # pub/sub pulls ahead as tasks get longer and waves of
+        # completions pile up.
+        def per_msg_ms() -> float:
+            if cfg.notification != "tcp":
+                return cfg.cost.pubsub_msg_ms
+            with inflight_lock:
+                n = inflight[0]
+            return (cfg.cost.tcp_connect_ms
+                    + cfg.cost.tcp_msg_ms
+                    * (1.0 + cfg.cost.tcp_irq_factor * n))
+
+        def resolve_g(a):
+            if isinstance(a, TaskRef):
+                return (yield from kv.get_g(a.key))
+            return a
+
+        def lambda_body(key: str):
+            def body():
                 with inflight_lock:
-                    n = inflight[0]
-                return (cfg.cost.tcp_connect_ms
-                        + cfg.cost.tcp_msg_ms
-                        * (1.0 + cfg.cost.tcp_irq_factor * n))
-
-            def lambda_body(key: str):
-                def body():
+                    inflight[0] += 1
+                try:
+                    task = dag.tasks[key]
+                    t0 = clock.now_ms()
+                    args = []
+                    for a in task.args:
+                        args.append((yield from resolve_g(a)))
+                    kwargs = {}
+                    for k, v in task.kwargs.items():
+                        kwargs[k] = yield from resolve_g(v)
+                    read_ms = clock.now_ms() - t0
+                    t0 = clock.now_ms()
+                    with task_clock(compute_clock):
+                        out = task.fn(*args, **kwargs)
+                    # Flush compute deferred inside the task function
+                    # (event substrate) before reading the clock delta.
+                    yield ("flush",)
+                    compute_ms = clock.now_ms() - t0
+                    t0 = clock.now_ms()
+                    yield from kv.put_g(key, out)
+                    write_ms = clock.now_ms() - t0
+                    metrics.record(
+                        task=key, event="executed", read_ms=read_ms,
+                        compute_ms=compute_ms, write_ms=write_ms,
+                        nbytes=sizeof(out),
+                    )
+                    done_q.put((key, None))
+                except Exception as exc:  # pragma: no cover - see below
+                    done_q.put((key, exc))
+                finally:
                     with inflight_lock:
-                        inflight[0] += 1
-                    try:
-                        task = dag.tasks[key]
-                        t0 = clock.now_ms()
+                        inflight[0] -= 1
 
-                        def resolve(a):
-                            return kv.get(a.key) if isinstance(a, TaskRef) else a
+            return body
 
-                        args = [resolve(a) for a in task.args]
-                        kwargs = {k: resolve(v)
-                                  for k, v in task.kwargs.items()}
-                        read_ms = clock.now_ms() - t0
-                        t0 = clock.now_ms()
-                        with task_clock(compute_clock):
-                            out = task.fn(*args, **kwargs)
-                        compute_ms = clock.now_ms() - t0
-                        t0 = clock.now_ms()
-                        kv.put(key, out)
-                        write_ms = clock.now_ms() - t0
-                        metrics.record(
-                            task=key, event="executed", read_ms=read_ms,
-                            compute_ms=compute_ms, write_ms=write_ms,
-                            nbytes=sizeof(out),
-                        )
-                        done_q.put((key, None))
-                    except Exception as exc:  # pragma: no cover - see below
-                        done_q.put((key, exc))
-                    finally:
-                        with inflight_lock:
-                            inflight[0] -= 1
-
-                return body
-
-            indeg = {k: len(dag.deps[k]) for k in dag.tasks}
-            t0_ms = clock.now_ms()
-            metrics.origin_ms = t0_ms
-            for k in dag.leaves:
-                invokers.submit(lambda_body(k))
-            remaining = set(dag.tasks)
-            deadline = clock.now_ms() + cfg.job_timeout_s * 1e3
-            try:
-                while remaining:
-                    timeout_ms = deadline - clock.now_ms()
-                    if timeout_ms <= 0:
-                        raise JobError(f"timeout; remaining={len(remaining)}")
-                    try:
-                        key, err = done_q.get(timeout=timeout_ms / 1e3)
-                    except queue.Empty:
-                        continue
-                    if err is not None:
-                        raise JobError(f"task {key!r} failed: {err!r}")
-                    # serialized scheduler handling
-                    clock.charge(per_msg_ms())
-                    remaining.discard(key)
-                    for child in dag.children[key]:
-                        indeg[child] -= 1
-                        if indeg[child] == 0:
-                            invokers.submit(lambda_body(child))
-            finally:
-                invokers.close()
-                # See WukongEngine.compute: platform-wrapped queued
-                # bodies hold reservations that only their wrapper's
-                # finally releases — run them, don't drop them.
-                pool.shutdown(wait=False, cancel_futures=platform is None)
-            wall = (clock.now_ms() - t0_ms) / 1e3
-            results = {k: kv.get(k) for k in dag.roots}
-            # Snapshot inside the actor block (see WukongEngine.compute).
-            report = JobReport(
-                results=results,
-                wall_s=wall,
-                tasks=len(dag),
-                executors_invoked=invokers.invocations,
-                kv_stats=kv.stats.snapshot(),
-                metrics=list(metrics.records),
-                charged_ms=clock.charged_ms - charged0,
-                optimizer=getattr(dag, "pass_stats", ()),
-                platform_stats=_platform_stats(platform, [invokers]),
-            )
+        indeg = {k: len(dag.deps[k]) for k in dag.tasks}
+        t0_ms = clock.now_ms()
+        metrics.origin_ms = t0_ms
+        for k in dag.leaves:
+            invokers.submit(lambda_body(k))
+        remaining = set(dag.tasks)
+        deadline = clock.now_ms() + cfg.job_timeout_s * 1e3
+        try:
+            while remaining:
+                timeout_ms = deadline - clock.now_ms()
+                if timeout_ms <= 0:
+                    raise JobError(f"timeout; remaining={len(remaining)}")
+                try:
+                    key, err = yield ("get", done_q, timeout_ms / 1e3)
+                except queue.Empty:
+                    continue
+                if err is not None:
+                    raise JobError(f"task {key!r} failed: {err!r}")
+                # serialized scheduler handling
+                yield ("charge", per_msg_ms())
+                remaining.discard(key)
+                for child in dag.children[key]:
+                    indeg[child] -= 1
+                    if indeg[child] == 0:
+                        invokers.submit(lambda_body(child))
+        finally:
+            invokers.close()
+            # See WukongEngine: platform-wrapped queued bodies hold
+            # reservations that only their wrapper's finally releases —
+            # run them, don't drop them.
+            pool.shutdown(wait=False, cancel_futures=platform is None)
+        wall = (clock.now_ms() - t0_ms) / 1e3
+        results = {}
+        for k in dag.roots:
+            results[k] = yield from kv.get_g(k)
+        # Snapshot inside the job generator (see WukongEngine).
+        report = JobReport(
+            results=results,
+            wall_s=wall,
+            tasks=len(dag),
+            executors_invoked=invokers.invocations,
+            kv_stats=kv.stats.snapshot(),
+            metrics=list(metrics.records),
+            charged_ms=clock.charged_ms - charged0,
+            optimizer=getattr(dag, "pass_stats", ()),
+            platform_stats=_platform_stats(platform, [invokers]),
+        )
         return report
 
 
@@ -650,6 +678,7 @@ class ServerfulConfig:
     # pay-per-allocation vs pay-per-use comparison of fig14.
     n_vms: int = 5                 # paper: five t2.2xlarge VMs
     vm_price_per_hour_usd: float = 0.3712  # t2.2xlarge on-demand
+    record_metrics: bool = True    # off for million-task scaling runs
 
 
 class ServerfulEngine:
@@ -668,122 +697,131 @@ class ServerfulEngine:
         dag = ensure_compiled(dag, cfg.optimize)
         clock_cost = dataclasses.replace(cfg.cost)
         kv = ShardedKVStore(n_shards=1, cost=clock_cost)  # clock + channels
+        return kv.clock.run(self._compute_g(dag, kv))
+
+    def _compute_g(self, dag: DAG, kv: ShardedKVStore):
+        cfg = self.config
         clock = kv.clock
-        with clock.actor():
-            metrics = TaskMetrics(clock)
-            owner: dict[str, int] = {}    # task key -> worker that holds it
-            data: list[dict[str, Any]] = [dict() for _ in range(cfg.n_workers)]
-            owner_lock = threading.Lock()
-            done_q = clock.queue()
-            pool = clock.pool(cfg.n_workers)
+        metrics = TaskMetrics(clock, enabled=cfg.record_metrics)
+        owner: dict[str, int] = {}    # task key -> worker that holds it
+        data: list[dict[str, Any]] = [dict() for _ in range(cfg.n_workers)]
+        owner_lock = threading.Lock()
+        done_q = clock.queue()
+        pool = clock.pool(cfg.n_workers)
 
-            def run_on_worker(key: str, wid: int):
-                def body():
-                    try:
-                        task = dag.tasks[key]
-                        t0 = clock.now_ms()
+        def run_on_worker(key: str, wid: int):
+            def body():
+                try:
+                    task = dag.tasks[key]
+                    t0 = clock.now_ms()
 
-                        def resolve(a):
-                            if not isinstance(a, TaskRef):
-                                return a
-                            with owner_lock:
-                                src = owner[a.key]
-                                val = data[src][a.key]
-                            if src != wid:
-                                # direct TCP transfer between workers
-                                ms = sizeof(val) / (
-                                    cfg.worker_bandwidth_mbps * 1e6) * 1e3
-                                clock.charge(cfg.cost.tcp_msg_ms + ms)
-                            return val
-
-                        args = [resolve(a) for a in task.args]
-                        kwargs = {k: resolve(v)
-                                  for k, v in task.kwargs.items()}
-                        read_ms = clock.now_ms() - t0
-                        t0 = clock.now_ms()
-                        with task_clock(clock):
-                            out = task.fn(*args, **kwargs)
-                        compute_ms = clock.now_ms() - t0
+                    def resolve_g(a):
+                        if not isinstance(a, TaskRef):
+                            return a
                         with owner_lock:
-                            data[wid][key] = out
-                            owner[key] = wid
-                        metrics.record(task=key, event="executed",
-                                       read_ms=read_ms,
-                                       compute_ms=compute_ms,
-                                       write_ms=0.0, nbytes=sizeof(out))
-                        done_q.put((key, None))
-                    except Exception as exc:
-                        done_q.put((key, exc))
+                            src = owner[a.key]
+                            val = data[src][a.key]
+                        if src != wid:
+                            # direct TCP transfer between workers
+                            ms = sizeof(val) / (
+                                cfg.worker_bandwidth_mbps * 1e6) * 1e3
+                            yield ("charge", cfg.cost.tcp_msg_ms + ms)
+                        return val
 
-                return body
+                    args = []
+                    for a in task.args:
+                        args.append((yield from resolve_g(a)))
+                    kwargs = {}
+                    for k, v in task.kwargs.items():
+                        kwargs[k] = yield from resolve_g(v)
+                    read_ms = clock.now_ms() - t0
+                    t0 = clock.now_ms()
+                    with task_clock(clock):
+                        out = task.fn(*args, **kwargs)
+                    # Flush compute deferred inside the task function
+                    # (event substrate) before reading the clock delta.
+                    yield ("flush",)
+                    compute_ms = clock.now_ms() - t0
+                    with owner_lock:
+                        data[wid][key] = out
+                        owner[key] = wid
+                    metrics.record(task=key, event="executed",
+                                   read_ms=read_ms,
+                                   compute_ms=compute_ms,
+                                   write_ms=0.0, nbytes=sizeof(out))
+                    done_q.put((key, None))
+                except Exception as exc:
+                    done_q.put((key, exc))
 
-            def pick_worker(key: str, rr: int) -> int:
-                # locality: the worker holding the most input bytes
-                best, best_bytes = rr % cfg.n_workers, -1
-                with owner_lock:
-                    counts: dict[int, int] = {}
-                    for dep in dag.deps[key]:
-                        w = owner.get(dep)
-                        if w is not None:
-                            counts[w] = counts.get(w, 0) + sizeof(data[w][dep])
-                for w, b in counts.items():
-                    if b > best_bytes:
-                        best, best_bytes = w, b
-                return best
+            return body
 
-            indeg = {k: len(dag.deps[k]) for k in dag.tasks}
-            t0_ms = clock.now_ms()
-            metrics.origin_ms = t0_ms
-            rr = 0
-            for k in dag.leaves:
-                pool.submit(run_on_worker(k, pick_worker(k, rr)))
-                rr += 1
-            remaining = set(dag.tasks)
-            deadline = clock.now_ms() + cfg.job_timeout_s * 1e3
-            try:
-                while remaining:
-                    timeout_ms = deadline - clock.now_ms()
-                    if timeout_ms <= 0:
-                        raise JobError(f"timeout; remaining={len(remaining)}")
-                    try:
-                        key, err = done_q.get(timeout=timeout_ms / 1e3)
-                    except queue.Empty:
-                        continue
-                    if err is not None:
-                        raise JobError(f"task {key!r} failed: {err!r}")
-                    clock.charge(cfg.cost.tcp_msg_ms)  # scheduler handling
-                    remaining.discard(key)
-                    for child in dag.children[key]:
-                        indeg[child] -= 1
-                        if indeg[child] == 0:
-                            pool.submit(
-                                run_on_worker(child, pick_worker(child, rr)))
-                            rr += 1
-            finally:
-                # No FaaS platform here (fixed cluster): queued bodies
-                # hold no reservations and are safe to drop.
-                pool.shutdown(wait=False, cancel_futures=True)
-            wall = (clock.now_ms() - t0_ms) / 1e3
+        def pick_worker(key: str, rr: int) -> int:
+            # locality: the worker holding the most input bytes
+            best, best_bytes = rr % cfg.n_workers, -1
             with owner_lock:
-                results = {k: data[owner[k]][k] for k in dag.roots}
-            # Snapshot inside the actor block (see WukongEngine.compute).
-            report = JobReport(
-                results=results, wall_s=wall, tasks=len(dag),
-                executors_invoked=0, kv_stats=kv.stats.snapshot(),
-                metrics=list(metrics.records), charged_ms=clock.charged_ms,
-                optimizer=getattr(dag, "pass_stats", ()),
-                platform_stats={
-                    "mode": "serverful",
-                    "n_vms": cfg.n_vms,
-                    "vm_price_per_hour_usd": cfg.vm_price_per_hour_usd,
-                    # The cluster is billed for the makespan regardless of
-                    # utilization — allocation-based, not use-based.
-                    "billed_usd": cfg.n_vms * cfg.vm_price_per_hour_usd
-                    * wall / 3600.0,
-                    "cold_starts": 0,
-                    "invocations": 0,
-                },
-            )
+                counts: dict[int, int] = {}
+                for dep in dag.deps[key]:
+                    w = owner.get(dep)
+                    if w is not None:
+                        counts[w] = counts.get(w, 0) + sizeof(data[w][dep])
+            for w, b in counts.items():
+                if b > best_bytes:
+                    best, best_bytes = w, b
+            return best
+
+        indeg = {k: len(dag.deps[k]) for k in dag.tasks}
+        t0_ms = clock.now_ms()
+        metrics.origin_ms = t0_ms
+        rr = 0
+        for k in dag.leaves:
+            pool.submit(run_on_worker(k, pick_worker(k, rr)))
+            rr += 1
+        remaining = set(dag.tasks)
+        deadline = clock.now_ms() + cfg.job_timeout_s * 1e3
+        try:
+            while remaining:
+                timeout_ms = deadline - clock.now_ms()
+                if timeout_ms <= 0:
+                    raise JobError(f"timeout; remaining={len(remaining)}")
+                try:
+                    key, err = yield ("get", done_q, timeout_ms / 1e3)
+                except queue.Empty:
+                    continue
+                if err is not None:
+                    raise JobError(f"task {key!r} failed: {err!r}")
+                yield ("charge", cfg.cost.tcp_msg_ms)  # scheduler handling
+                remaining.discard(key)
+                for child in dag.children[key]:
+                    indeg[child] -= 1
+                    if indeg[child] == 0:
+                        pool.submit(
+                            run_on_worker(child, pick_worker(child, rr)))
+                        rr += 1
+        finally:
+            # No FaaS platform here (fixed cluster): queued bodies
+            # hold no reservations and are safe to drop.
+            pool.shutdown(wait=False, cancel_futures=True)
+        wall = (clock.now_ms() - t0_ms) / 1e3
+        with owner_lock:
+            results = {k: data[owner[k]][k] for k in dag.roots}
+        # Snapshot inside the job generator (see WukongEngine).
+        report = JobReport(
+            results=results, wall_s=wall, tasks=len(dag),
+            executors_invoked=0, kv_stats=kv.stats.snapshot(),
+            metrics=list(metrics.records), charged_ms=clock.charged_ms,
+            optimizer=getattr(dag, "pass_stats", ()),
+            platform_stats={
+                "mode": "serverful",
+                "n_vms": cfg.n_vms,
+                "vm_price_per_hour_usd": cfg.vm_price_per_hour_usd,
+                # The cluster is billed for the makespan regardless of
+                # utilization — allocation-based, not use-based.
+                "billed_usd": cfg.n_vms * cfg.vm_price_per_hour_usd
+                * wall / 3600.0,
+                "cold_starts": 0,
+                "invocations": 0,
+            },
+        )
         return report
 
 

@@ -59,9 +59,14 @@ class TaskMetrics:
     milliseconds under the virtual clock, so the fig13 CDF is
     deterministic and independent of host load."""
 
-    def __init__(self, clock: BaseClock | None = None) -> None:
+    def __init__(self, clock: BaseClock | None = None,
+                 enabled: bool = True) -> None:
         self._lock = threading.Lock()
         self.clock = clock
+        # Million-task runs: ~2.5 record dicts per task dominate memory;
+        # the scaling benchmarks disable recording (charges/kv counters
+        # are unaffected — records never touch the clock).
+        self.enabled = enabled
         # Stamps are relative to this origin (the engine sets it to the
         # job's t0). On a shared substrate the clock does not restart per
         # job, so absolute stamps would make otherwise-identical jobs
@@ -70,6 +75,8 @@ class TaskMetrics:
         self.records: list[dict[str, Any]] = []
 
     def record(self, **kw: Any) -> None:
+        if not self.enabled:
+            return
         if self.clock is not None and "at_ms" not in kw:
             kw["at_ms"] = self.clock.now_ms() - self.origin_ms
         with self._lock:
@@ -83,7 +90,7 @@ class ExecutorContext:
         self,
         dag: DAG,
         kv: ShardedKVStore,
-        spawn: Callable[..., None],
+        spawn: Callable[..., Any],
         faults: FaultInjector,
         heartbeats: HeartbeatRegistry,
         metrics: TaskMetrics,
@@ -96,7 +103,9 @@ class ExecutorContext:
     ):
         self.dag = dag
         self.kv = kv
-        self.spawn = spawn  # spawn(start_keys, seed_cache, schedule, width)
+        # spawn(start_keys, seed_cache, schedule, width) — a generator
+        # function (effect protocol); executors drive it with yield from.
+        self.spawn = spawn
         self.faults = faults
         self.heartbeats = heartbeats
         self.metrics = metrics
@@ -163,7 +172,7 @@ class TaskExecutor:
     def _edge_id(self, src: str, dst: str) -> str:
         return f"{src}=>{dst}"
 
-    def _publish_local_deps_of(self, key: str) -> float:
+    def _publish_local_deps_of_g(self, key: str):
         """Publish locally-held objects that ``key`` depends on. Returns
         simulated ms spent writing (clock delta: charged latency plus any
         lane-contention queueing)."""
@@ -171,10 +180,19 @@ class TaskExecutor:
         t0 = clock.now_ms()
         for dep in self.ctx.dag.deps[key]:
             if dep in self.cache:
-                self.ctx.kv.put_if_absent(dep, self.cache[dep])
+                yield from self.ctx.kv.put_if_absent_g(dep, self.cache[dep])
         return clock.now_ms() - t0
 
-    def _gather_inputs(self, key: str) -> tuple[list[Any], dict[str, Any], float]:
+    def _resolve_g(self, a: Any, fetched: dict[str, Any]):
+        if isinstance(a, TaskRef):
+            if a.key in self.cache:
+                return self.cache[a.key]  # data locality: no network
+            if a.key in fetched:
+                return fetched[a.key]
+            return (yield from self.ctx.kv.get_g(a.key))
+        return a
+
+    def _gather_inputs_g(self, key: str):
         task = self.ctx.dag.tasks[key]
         clock = self.ctx.kv.clock
         t0 = clock.now_ms()
@@ -192,23 +210,23 @@ class TaskExecutor:
                     fetched[a.key] = None
                     need.append(a.key)
             if need:
-                fetched = dict(zip(need, self.ctx.kv.mget(need)))
+                values = yield from self.ctx.kv.mget_g(need)
+                fetched = dict(zip(need, values))
 
-        def resolve(a: Any) -> Any:
-            if isinstance(a, TaskRef):
-                if a.key in self.cache:
-                    return self.cache[a.key]  # data locality: no network
-                if a.key in fetched:
-                    return fetched[a.key]
-                return self.ctx.kv.get(a.key)
-            return a
-
-        args = [resolve(a) for a in task.args]
-        kwargs = {k: resolve(v) for k, v in task.kwargs.items()}
+        args = []
+        for a in task.args:
+            args.append((yield from self._resolve_g(a, fetched)))
+        kwargs = {}
+        for k, v in task.kwargs.items():
+            kwargs[k] = yield from self._resolve_g(v, fetched)
         return args, kwargs, clock.now_ms() - t0
 
     # -- the walk -------------------------------------------------------------
-    def run(self) -> None:
+    def run_g(self):
+        """The executor body as an effect-protocol generator (simclock).
+
+        Drive it with ``clock.spawn`` (event substrate runs it as a frame,
+        thread substrates interpret it via ``run_effects``)."""
         hb = ExecutorHeartbeat(
             executor_id=self.executor_id,
             start_key=self.start_key,
@@ -219,7 +237,7 @@ class TaskExecutor:
         )
         self.ctx.heartbeats.beat(hb)
         try:
-            self._walk()
+            yield from self._walk_g()
         except SimulatedTaskFailure:
             failed = self._failed_at
             if self.ctx.stopped():
@@ -229,7 +247,7 @@ class TaskExecutor:
                 # exponential in the attempt number.
                 backoff = self.ctx.faults.retry_backoff_ms(self.attempt)
                 if backoff > 0:
-                    self.ctx.kv.clock.charge(backoff)
+                    yield ("charge", backoff)
                 # Lambda automatic retry: fresh container. Only the failing
                 # start re-runs on the incremented attempt; completed walks
                 # are durable (idempotent deposits/spawns), and un-walked
@@ -237,7 +255,7 @@ class TaskExecutor:
                 # budget yet, so they respawn at attempt 0. This keeps a
                 # coalesced batch's fault tolerance identical per-task to
                 # uncoalesced execution.
-                self.ctx.spawn(
+                yield from self.ctx.spawn(
                     self.start_keys[failed],
                     dict(self.seed_cache),
                     self.schedule,
@@ -247,7 +265,7 @@ class TaskExecutor:
                 )
                 rest = self.start_keys[failed + 1:]
                 if rest:
-                    self.ctx.spawn(
+                    yield from self.ctx.spawn(
                         rest,
                         dict(self.seed_cache),
                         self.schedule,
@@ -256,29 +274,29 @@ class TaskExecutor:
                         parent=self.parent,
                     )
             else:
-                self.ctx.kv.publish(
+                yield from self.ctx.kv.publish_g(
                     RESULTS_CHANNEL,
                     {"type": "error", "key": self.start_keys[failed],
                      "error": "task failed after max retries"},
                 )
         except Exception as exc:  # task-code bug: fail the job loudly
-            self.ctx.kv.publish(
+            yield from self.ctx.kv.publish_g(
                 RESULTS_CHANNEL,
                 {"type": "error", "key": self.start_key, "error": repr(exc)},
             )
         finally:
             self.ctx.heartbeats.done(self.executor_id)
 
-    def _walk(self) -> None:
+    def _walk_g(self):
         self.cache.update(self.seed_cache)
         # Coalesced batches: walk each start key in order. The local cache
         # persists across walks, so batch members meeting at a fan-in
         # resolve it without any KV reads.
         for i, start in enumerate(self.start_keys):
             self._failed_at = i
-            self._walk_from(start)
+            yield from self._walk_from_g(start)
 
-    def _walk_from(self, start: str) -> None:
+    def _walk_from_g(self, start: str):
         dag = self.ctx.dag
         kv = self.ctx.kv
         clock = kv.clock
@@ -313,13 +331,15 @@ class TaskExecutor:
                         dep for dep in dag.deps[current] if dep not in items
                     )
                     t0 = clock.now_ms()
-                    count, missing = kv.deposit_and_increment(
+                    count, missing = yield from kv.deposit_and_increment_g(
                         _counter_id(current), edge, items, expected
                     )
                     write_ms = clock.now_ms() - t0
                 else:
-                    write_ms = self._publish_local_deps_of(current)
-                    count = kv.increment_dependency(
+                    write_ms = yield from self._publish_local_deps_of_g(
+                        current
+                    )
+                    count = yield from kv.increment_dependency_g(
                         _counter_id(current), edge
                     )
                 if count < indeg:
@@ -352,7 +372,7 @@ class TaskExecutor:
                     f"executor schedule {self.schedule.leaf!r} does not "
                     f"cover task {current!r}"
                 )
-            args, kwargs, read_ms = self._gather_inputs(current)
+            args, kwargs, read_ms = yield from self._gather_inputs_g(current)
             hb = ExecutorHeartbeat(
                 executor_id=self.executor_id,
                 start_key=self.start_key,
@@ -367,7 +387,7 @@ class TaskExecutor:
                 raise SimulatedTaskFailure(current)
             straggle = self.ctx.faults.straggle_ms(current, self.attempt)
             if straggle > 0:
-                kv.clock.charge(straggle)
+                yield ("charge", straggle)
 
             # The engine clock is installed for the duration of the task
             # function so workload-declared compute (simulated_compute /
@@ -375,6 +395,10 @@ class TaskExecutor:
             t0 = clock.now_ms()
             with task_clock(self.ctx.compute_clock):
                 out = dag.tasks[current].fn(*args, **kwargs)
+            # Event substrate: compute charged inside the task function is
+            # deferred (the function cannot yield); flush it onto the clock
+            # before reading the delta. No-op on the thread substrates.
+            yield ("flush",)
             compute_ms = clock.now_ms() - t0
             self.cache[current] = out
             self.tasks_executed += 1
@@ -386,9 +410,9 @@ class TaskExecutor:
             # ---- sink: final result --------------------------------------
             if not children:
                 t0 = clock.now_ms()
-                kv.put_if_absent(current, out, nbytes=out_nbytes)
+                yield from kv.put_if_absent_g(current, out, nbytes=out_nbytes)
                 write_ms = clock.now_ms() - t0
-                kv.publish(
+                yield from kv.publish_g(
                     RESULTS_CHANNEL,
                     {"type": "result", "key": current},
                 )
@@ -416,7 +440,7 @@ class TaskExecutor:
                 # Intermediate outputs needed by the new executors go to the
                 # KV store; invoked executors receive the keys (paper §IV-C).
                 t0 = clock.now_ms()
-                kv.put_if_absent(current, out, nbytes=out_nbytes)
+                yield from kv.put_if_absent_g(current, out, nbytes=out_nbytes)
                 write_ms = clock.now_ms() - t0
                 seed: dict[str, Any] = {}
             else:
@@ -433,8 +457,8 @@ class TaskExecutor:
             else:
                 groups = [(child,) for child in invoked]
             for group in groups:
-                self.ctx.spawn(group, dict(seed), self.schedule,
-                               width=len(groups), parent=current)
+                yield from self.ctx.spawn(group, dict(seed), self.schedule,
+                                          width=len(groups), parent=current)
             self.ctx.metrics.record(
                 task=current, event="fanout", width=len(children),
                 write_ms=write_ms, executor=self.executor_id,

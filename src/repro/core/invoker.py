@@ -31,8 +31,10 @@ Two provider models decide cold starts:
   returns to the pool, warm, when the body finishes.
 
 All blocking (work queues, lane threads) goes through the engine clock's
-primitives, so under the virtual clock an idle invoker lane costs zero
-wall time and never holds back virtual-time advancement.
+effect protocol (``simclock``): lanes and the proxy server are generator
+actors, so on the event substrate an idle invoker lane is a parked
+continuation — no OS thread — and on the thread substrates it degrades
+to the familiar blocking loop via ``run_effects``.
 """
 from __future__ import annotations
 
@@ -40,7 +42,7 @@ import threading
 from typing import TYPE_CHECKING, Any, Callable
 
 from repro.core.kvstore import CostModel
-from repro.core.simclock import BaseClock
+from repro.core.simclock import BaseClock, run_effects
 
 if TYPE_CHECKING:  # import cycle: repro.platform imports repro.core
     from repro.platform import FaaSPlatform
@@ -79,14 +81,14 @@ class InvokerPool:
         for i in range(self._n_lanes):
             clock.spawn(self._lane, name=f"{name}-{i}")
 
-    def _invoke_legacy(self, body: Callable[[], Any],
-                       extra_ms: float, index: int) -> bool:
+    def _invoke_legacy_g(self, body: Callable[[], Any],
+                         extra_ms: float, index: int):
         invoke_ms, cold = self.cost.invoke_draw(index)
         if cold:
             with self._lock:
                 self.cold_starts += 1
         # Invocation API latency is paid serially per lane.
-        self.clock.charge(invoke_ms + extra_ms)
+        yield ("charge", invoke_ms + extra_ms)
         try:
             self.runtime_pool.submit(body)
         except RuntimeError:
@@ -95,8 +97,8 @@ class InvokerPool:
             return False
         return True
 
-    def _invoke_platform(self, body: Callable[[], Any],
-                         extra_ms: float, index: int) -> bool:
+    def _invoke_platform_g(self, body: Callable[[], Any],
+                           extra_ms: float, index: int):
         platform = self.platform
         assert platform is not None
         # Account concurrency: beyond the (burst-ramped) cap the invoke
@@ -110,20 +112,22 @@ class InvokerPool:
                 # nothing is reserved yet, so just drop the invocation
                 # instead of fighting live tenants for the account cap.
                 return False
-            self.clock.charge(platform.backoff_ms(attempt))
+            yield ("charge", platform.backoff_ms(attempt))
             attempt += 1
         # The invoke API round trip precedes container assignment (as on
         # the real platform), so a container released while this call is
         # in flight is warm for it; the cold-start provisioning delay is
         # then paid only when the pool misses.
-        self.clock.charge(self.cost.invoke_jitter_ms(index) + extra_ms)
+        yield ("charge", self.cost.invoke_jitter_ms(index) + extra_ms)
         cid, cold = platform.acquire(self.function)
         if cold:
             with self._lock:
                 self.cold_starts += 1
-            self.clock.charge(self.cost.cold_start_ms)
+            yield ("charge", self.cost.cold_start_ms)
         try:
-            self.runtime_pool.submit(platform.wrap(self.function, cid, body))
+            self.runtime_pool.submit(
+                platform.wrap_g(self.function, cid, body)
+            )
         except RuntimeError:
             # Job resolved while this lane was mid-invoke: the body will
             # never run, so hand the slot and container straight back.
@@ -131,9 +135,9 @@ class InvokerPool:
             return False
         return True
 
-    def _lane(self) -> None:
+    def _lane(self):
         while True:
-            item = self._q.get()
+            item = yield ("get", self._q, None)
             if item is None:
                 return
             if self._closed:
@@ -147,9 +151,9 @@ class InvokerPool:
                 self.invocations += 1
                 index = self.invocations
             if self.platform is None:
-                ok = self._invoke_legacy(body, extra_ms, index)
+                ok = yield from self._invoke_legacy_g(body, extra_ms, index)
             else:
-                ok = self._invoke_platform(body, extra_ms, index)
+                ok = yield from self._invoke_platform_g(body, extra_ms, index)
             if not ok:
                 return
 
@@ -183,12 +187,13 @@ class FanoutProxy:
         self.handled_fanouts = 0
         kv.clock.spawn(self._serve, name="kv-proxy")
 
-    def _serve(self) -> None:
-        # Event-driven: the proxy blocks on its subscription (costing
-        # zero wall time under the virtual clock) until a fan-out message
-        # or the ``None`` shutdown sentinel published by ``close``.
+    def _serve(self):
+        # Event-driven: the proxy parks on its subscription (costing
+        # zero wall time — and, on the event substrate, zero threads)
+        # until a fan-out message or the ``None`` shutdown sentinel
+        # published by ``close``.
         while not self._stop.is_set():
-            msg = self._sub.get()
+            msg = yield ("get", self._sub, None)
             if msg is None:
                 return
             spawn_fns = msg["spawns"]  # list of zero-arg callables
@@ -196,12 +201,15 @@ class FanoutProxy:
             for fn in spawn_fns:
                 self.invokers.submit(fn)
 
-    def close(self) -> None:
+    def close_g(self):
         self._stop.set()
         # The shutdown sentinel is already queued on our subscription, so
         # releasing it immediately after is safe — and mandatory on a
         # substrate that outlives this job: an abandoned proxy
         # subscription would receive (and leak) every later job's
         # fan-out messages on this channel name.
-        self.kv.publish(self.CHANNEL, None)
+        yield from self.kv.publish_g(self.CHANNEL, None)
         self.kv.unsubscribe(self.CHANNEL, self._sub)
+
+    def close(self) -> None:
+        run_effects(self.kv.clock, self.close_g())

@@ -57,40 +57,60 @@ assigned — two identical jobs on one substrate report identically.
 from __future__ import annotations
 
 import dataclasses
+import os
 import pickle
 import random
 import threading
 import zlib
 from typing import Any, Iterable, Mapping
 
-from repro.core.simclock import BaseClock, clock_for_scale
+from repro.core.simclock import (
+    BaseClock,
+    _current_frame,
+    clock_for_scale,
+    run_effects,
+)
 
 # Separator between a namespace (job id) and the user key. Placement
 # hashing strips everything up to the first separator, so a namespaced
 # key lands on the same shard its bare key would.
 NAMESPACE_SEP = "::"
 
-# Per-thread stats sink: while a KVNamespace call is on the stack, the
+# Per-actor stats sink: while a KVNamespace call is on the stack, the
 # parent store's counter bumps are mirrored into the view's own KVStats
 # (the view can't re-derive byte counts — entry sizes are recorded once
-# at put time and not returned by the ops).
+# at put time and not returned by the ops). On the event substrate the
+# sink rides on the *frame* (the op suspends and resumes inside the
+# scope, and many frames share one driver thread); thread-locals remain
+# the fallback for the thread substrates and external callers.
 _stats_sink = threading.local()
 
 
 class _SinkScope:
-    """Installs a view as this thread's stats sink for one parent call."""
+    """Installs a view as the current actor's stats sink for one parent
+    call (frame-scoped under the event substrate, thread-scoped
+    otherwise)."""
 
-    __slots__ = ("view", "_prev")
+    __slots__ = ("view", "_prev", "_frame")
 
     def __init__(self, view: "KVNamespace"):
         self.view = view
 
     def __enter__(self) -> None:
-        self._prev = getattr(_stats_sink, "view", None)
-        _stats_sink.view = self.view
+        frame = _current_frame()
+        self._frame = frame
+        if frame is not None:
+            self._prev = frame.sink
+            frame.sink = self.view
+        else:
+            self._prev = getattr(_stats_sink, "view", None)
+            _stats_sink.view = self.view
 
     def __exit__(self, *exc: Any) -> None:
-        _stats_sink.view = self._prev
+        if self._frame is not None:
+            self._frame.sink = self._prev
+        else:
+            _stats_sink.view = self._prev
 
 
 def sizeof(value: Any) -> int:
@@ -122,11 +142,17 @@ class CostModel:
     (invoke_ms ~50ms via boto3) and plausible AWS numbers elsewhere.
 
     ``time_scale`` selects the clock mode (repro.core.simclock): 0 — the
-    default — runs on the deterministic virtual discrete-event clock
+    default — runs on a deterministic virtual discrete-event clock
     (idle simulated time costs zero wall time, runs are bit-identical);
     > 0 keeps the seed real-time mode, really sleeping
     ``ms * time_scale / 1e3`` seconds per charge, for sanity
-    cross-checks against the virtual substrate.
+    cross-checks against the virtual substrates.
+
+    ``substrate`` picks the virtual scheduler when ``time_scale == 0``:
+    ``"event"`` (the default; override via ``REPRO_SIM_SUBSTRATE``) is
+    the continuation/event-driven engine that scales to million-task
+    DAGs; ``"thread"`` is the PR-3 thread-per-actor engine kept as a
+    cross-check mode. Both produce bit-identical charges.
 
     Invocation latency is a seeded *distribution*, not a constant, when
     the jitter/cold-start knobs are set: each invocation ``index`` draws
@@ -158,6 +184,9 @@ class CostModel:
     stripe_threshold_bytes: int = 1 << 20
     max_stripes: int = 8
     time_scale: float = 0.0
+    substrate: str = dataclasses.field(
+        default_factory=lambda: os.environ.get("REPRO_SIM_SUBSTRATE",
+                                               "event"))
 
     def transfer_ms(self, nbytes: int) -> float:
         return nbytes / (self.kv_bandwidth_mbps * 1e6) * 1e3
@@ -276,7 +305,8 @@ class ShardedKVStore:
         if counter_mode not in ("edge_set", "paper"):
             raise ValueError(counter_mode)
         self.cost = cost or CostModel()
-        self.clock: BaseClock = clock or clock_for_scale(self.cost.time_scale)
+        self.clock: BaseClock = clock or clock_for_scale(
+            self.cost.time_scale, getattr(self.cost, "substrate", "event"))
         if colocate_shards:
             # all shards share one VM -> one NIC -> one transfer lane
             shared = self.clock.lock()
@@ -306,7 +336,11 @@ class ShardedKVStore:
             st = self.stats
             for name, delta in fields.items():
                 setattr(st, name, getattr(st, name) + delta)
-        view = getattr(_stats_sink, "view", None)
+        frame = _current_frame()
+        if frame is not None:
+            view = frame.sink
+        else:
+            view = getattr(_stats_sink, "view", None)
         if view is not None:
             view._bump(**fields)
 
@@ -355,16 +389,19 @@ class ShardedKVStore:
             for i in range(n_stripes)
         ]
 
-    def _pay(self, shard: _Shard, nbytes: int) -> None:
+    def _pay_g(self, shard: _Shard, nbytes: int) -> Any:
         # Base latency is paid outside the lane; transfer holds the lane so
         # concurrent large objects to one shard serialize (NIC model).
-        self.clock.charge(self.cost.kv_base_ms)
+        yield ("charge", self.cost.kv_base_ms)
         t_ms = self.cost.transfer_ms(nbytes)
         if t_ms > 0:
-            with shard.lane:
-                self.clock.charge(t_ms)
+            yield ("acquire", shard.lane)
+            try:
+                yield ("charge", t_ms)
+            finally:
+                shard.lane.release()
 
-    def _charge_striped_transfer(self, layout) -> None:
+    def _charge_striped_transfer_g(self, layout) -> Any:
         """Charge a striped transfer: stripes move over their lanes
         concurrently, so the op is billed the slowest *lane's* total (one
         stripe per lane when shards are distinct; the full serial sum when
@@ -387,8 +424,12 @@ class ShardedKVStore:
         wait_ms = max(lane_ms.values(), default=0.0)
         if wait_ms <= 0:
             return
-        with self.shards[layout[0][0]].lane:
-            self.clock.charge(wait_ms)
+        lane = self.shards[layout[0][0]].lane
+        yield ("acquire", lane)
+        try:
+            yield ("charge", wait_ms)
+        finally:
+            lane.release()
 
     # -- object store ------------------------------------------------------
     def _drop_stripes(self, key: str, n_stripes: int, first: int = 0) -> None:
@@ -400,8 +441,8 @@ class ShardedKVStore:
             with s.lock:
                 s.data.pop(_stripe_key(key, i), None)
 
-    def _write_stripes(self, key: str, value: Any, nbytes: int,
-                       n_stripes: int, if_absent: bool) -> bool:
+    def _write_stripes_g(self, key: str, value: Any, nbytes: int,
+                         n_stripes: int, if_absent: bool) -> Any:
         """Write stripes + manifest (manifest last: its insertion is the
         linearization point, so readers never observe a torn object).
         Returns False when ``if_absent`` and the manifest already existed
@@ -410,8 +451,8 @@ class ShardedKVStore:
         of a previously-striped value drops the old stripes its new
         layout does not cover."""
         layout = self._stripe_layout(key, nbytes, n_stripes)
-        self.clock.charge(self.cost.kv_base_ms)
-        self._charge_striped_transfer(layout)
+        yield ("charge", self.cost.kv_base_ms)
+        yield from self._charge_striped_transfer_g(layout)
         for shard_idx, skey, snbytes in layout:
             shard = self.shards[shard_idx]
             with shard.lock:
@@ -428,19 +469,19 @@ class ShardedKVStore:
             self._drop_stripes(key, old.n_stripes, first=n_stripes)
         return True
 
-    def put(self, key: str, value: Any, nbytes: int | None = None) -> None:
+    def put_g(self, key: str, value: Any, nbytes: int | None = None) -> Any:
         """Store ``value``. ``nbytes`` is an optional caller-known size
         hint (skips the recursive ``sizeof`` walk)."""
         if nbytes is None:
             nbytes = sizeof(value)
         n_stripes = self.stripes_for(nbytes)
         if n_stripes > 1:
-            self._write_stripes(key, value, nbytes, n_stripes,
-                                if_absent=False)
+            yield from self._write_stripes_g(key, value, nbytes, n_stripes,
+                                             if_absent=False)
             self._bump(puts=1, striped_puts=1, bytes_written=nbytes)
             return
         shard = self._shard(key)
-        self._pay(shard, nbytes)
+        yield from self._pay_g(shard, nbytes)
         with shard.lock:
             old = shard.data.get(key)
             shard.data[key] = _Entry(value, nbytes)
@@ -449,8 +490,11 @@ class ShardedKVStore:
             self._drop_stripes(key, old.n_stripes)
         self._bump(puts=1, bytes_written=nbytes)
 
-    def put_if_absent(self, key: str, value: Any,
-                      nbytes: int | None = None) -> bool:
+    def put(self, key: str, value: Any, nbytes: int | None = None) -> None:
+        run_effects(self.clock, self.put_g(key, value, nbytes))
+
+    def put_if_absent_g(self, key: str, value: Any,
+                        nbytes: int | None = None) -> Any:
         """Idempotent write used by retried/speculative executors."""
         shard = self._shard(key)
         with shard.lock:
@@ -460,12 +504,13 @@ class ShardedKVStore:
             nbytes = sizeof(value)
         n_stripes = self.stripes_for(nbytes)
         if n_stripes > 1:
-            if not self._write_stripes(key, value, nbytes, n_stripes,
-                                       if_absent=True):
+            ok = yield from self._write_stripes_g(key, value, nbytes,
+                                                  n_stripes, if_absent=True)
+            if not ok:
                 return False
             self._bump(puts=1, striped_puts=1, bytes_written=nbytes)
             return True
-        self._pay(shard, nbytes)
+        yield from self._pay_g(shard, nbytes)
         with shard.lock:
             if key in shard.data:
                 return False
@@ -473,7 +518,12 @@ class ShardedKVStore:
         self._bump(puts=1, bytes_written=nbytes)
         return True
 
-    def get(self, key: str) -> Any:
+    def put_if_absent(self, key: str, value: Any,
+                      nbytes: int | None = None) -> bool:
+        return run_effects(self.clock,
+                           self.put_if_absent_g(key, value, nbytes))
+
+    def get_g(self, key: str) -> Any:
         shard = self._shard(key)
         with shard.lock:
             if key not in shard.data:
@@ -481,14 +531,17 @@ class ShardedKVStore:
             entry = shard.data[key]
         if isinstance(entry, _StripeManifest):
             layout = self._stripe_layout(key, entry.nbytes, entry.n_stripes)
-            self.clock.charge(self.cost.kv_base_ms)
-            self._charge_striped_transfer(layout)
+            yield ("charge", self.cost.kv_base_ms)
+            yield from self._charge_striped_transfer_g(layout)
             self._bump(gets=1, striped_gets=1, bytes_read=entry.nbytes)
             return entry.value
         # Size was recorded once at put time; reads never re-derive it.
-        self._pay(shard, entry.nbytes)
+        yield from self._pay_g(shard, entry.nbytes)
         self._bump(gets=1, bytes_read=entry.nbytes)
         return entry.value
+
+    def get(self, key: str) -> Any:
+        return run_effects(self.clock, self.get_g(key))
 
     def exists(self, key: str) -> bool:
         shard = self._shard(key)
@@ -503,22 +556,28 @@ class ShardedKVStore:
             self._drop_stripes(key, entry.n_stripes)
 
     # -- fan-in dependency counters (paper §IV-C) ---------------------------
-    def register_counter(self, counter_id: str, width: int) -> None:
-        self.clock.charge(self.cost.kv_base_ms)
+    def register_counter_g(self, counter_id: str, width: int) -> Any:
+        yield ("charge", self.cost.kv_base_ms)
         with self._counter_lock:
             self._register_locked(counter_id, width)
 
-    def register_counters(self, widths: Mapping[str, int]) -> None:
+    def register_counter(self, counter_id: str, width: int) -> None:
+        run_effects(self.clock, self.register_counter_g(counter_id, width))
+
+    def register_counters_g(self, widths: Mapping[str, int]) -> Any:
         """Batched registration: the Storage Manager registers a whole
         job's fan-in counters in ONE round trip at workflow start
         (Lambada-style batching of many small storage requests). An empty
         registration sends nothing and costs nothing."""
         if not widths:
             return
-        self.clock.charge(self.cost.kv_base_ms)
+        yield ("charge", self.cost.kv_base_ms)
         with self._counter_lock:
             for counter_id, width in widths.items():
                 self._register_locked(counter_id, width)
+
+    def register_counters(self, widths: Mapping[str, int]) -> None:
+        run_effects(self.clock, self.register_counters_g(widths))
 
     def _register_locked(self, counter_id: str, width: int) -> None:
         self._counter_widths[counter_id] = width
@@ -543,7 +602,7 @@ class ShardedKVStore:
         self._counters[counter_id] = count
         return count
 
-    def increment_dependency(self, counter_id: str, edge_id: str) -> int:
+    def increment_dependency_g(self, counter_id: str, edge_id: str) -> Any:
         """Atomically record a satisfied in-edge; return the new count.
 
         ``edge_id`` identifies the in-edge being satisfied. In ``paper``
@@ -552,19 +611,23 @@ class ShardedKVStore:
         and continues through the fan-in; less -> it stores its outputs
         and stops (nobody ever waits).
         """
-        self.clock.charge(self.cost.kv_base_ms)
+        yield ("charge", self.cost.kv_base_ms)
         with self._counter_lock:
             count = self._record_edge_locked(counter_id, edge_id)
         self._bump(incrs=1)
         return count
 
-    def deposit_and_increment(
+    def increment_dependency(self, counter_id: str, edge_id: str) -> int:
+        return run_effects(
+            self.clock, self.increment_dependency_g(counter_id, edge_id))
+
+    def deposit_and_increment_g(
         self,
         counter_id: str,
         edge_id: str,
         items: "dict[str, Any]",
         expected: "tuple[str, ...]" = (),
-    ) -> "tuple[int, list[str]]":
+    ) -> Any:
         """Atomic fan-in arrival with delayed I/O (the optimizer's
         clustering pass; Wukong follow-up's locality optimization).
 
@@ -590,7 +653,7 @@ class ShardedKVStore:
         the same count, and its stores are if-absent.
         Returns ``(count, missing_expected_keys)``.
         """
-        self.clock.charge(self.cost.kv_base_ms)  # one combined round trip
+        yield ("charge", self.cost.kv_base_ms)  # one combined round trip
         # Sizes are derived BEFORE the counter lock: the recursive sizeof
         # walk of every item must not serialize the whole job's fan-in
         # protocol (every arrival in the job takes this lock).
@@ -643,14 +706,28 @@ class ShardedKVStore:
         # already durable; only the simulated clock accounting remains.
         for key, nbytes, n_stripes in stored:
             if n_stripes > 1:
-                self._charge_striped_transfer(
+                yield from self._charge_striped_transfer_g(
                     self._stripe_layout(key, nbytes, n_stripes))
                 continue
             t_ms = self.cost.transfer_ms(nbytes)
             if t_ms > 0:
-                with self._shard(key).lane:
-                    self.clock.charge(t_ms)
+                lane = self._shard(key).lane
+                yield ("acquire", lane)
+                try:
+                    yield ("charge", t_ms)
+                finally:
+                    lane.release()
         return count, missing
+
+    def deposit_and_increment(
+        self,
+        counter_id: str,
+        edge_id: str,
+        items: "dict[str, Any]",
+        expected: "tuple[str, ...]" = (),
+    ) -> "tuple[int, list[str]]":
+        return run_effects(self.clock, self.deposit_and_increment_g(
+            counter_id, edge_id, items, expected))
 
     def counter_value(self, counter_id: str) -> int:
         with self._counter_lock:
@@ -698,16 +775,19 @@ class ShardedKVStore:
             return sum(len(subs) for ch, subs in self._channels.items()
                        if ch.startswith(prefix))
 
-    def publish(self, channel: str, message: Any) -> None:
-        self.clock.charge(self.cost.pubsub_msg_ms)
+    def publish_g(self, channel: str, message: Any) -> Any:
+        yield ("charge", self.cost.pubsub_msg_ms)
         with self._chan_lock:
             subs = list(self._channels.get(channel, ()))
         for q in subs:
             q.put(message)
         self._bump(publishes=1)
 
+    def publish(self, channel: str, message: Any) -> None:
+        run_effects(self.clock, self.publish_g(channel, message))
+
     # -- bulk --------------------------------------------------------------
-    def mget(self, keys: Iterable[str]) -> list[Any]:
+    def mget_g(self, keys: Iterable[str]) -> Any:
         """Pipelined multi-get: keys are grouped by shard and each shard
         batch pays ONE ``kv_base_ms`` round trip (Lambada-style batching
         of small requests); transfer time is still charged per lane.
@@ -725,7 +805,7 @@ class ShardedKVStore:
         n_striped = 0
         for idx in sorted(by_shard):
             shard = self.shards[idx]
-            self.clock.charge(self.cost.kv_base_ms)  # one RT per shard batch
+            yield ("charge", self.cost.kv_base_ms)  # one RT per shard batch
             with shard.lock:
                 for k in by_shard[idx]:
                     if k not in shard.data:
@@ -742,14 +822,20 @@ class ShardedKVStore:
                 total_bytes += e.nbytes
             t_ms = self.cost.transfer_ms(batch_bytes)
             if t_ms > 0:
-                with shard.lane:
-                    self.clock.charge(t_ms)
+                yield ("acquire", shard.lane)
+                try:
+                    yield ("charge", t_ms)
+                finally:
+                    shard.lane.release()
         for k, manifest in striped:
-            self._charge_striped_transfer(
+            yield from self._charge_striped_transfer_g(
                 self._stripe_layout(k, manifest.nbytes, manifest.n_stripes))
         self._bump(gets=len(queued), striped_gets=n_striped,
                    mget_batches=len(by_shard), bytes_read=total_bytes)
         return [entries[k].value for k in keys]
+
+    def mget(self, keys: Iterable[str]) -> list[Any]:
+        return run_effects(self.clock, self.mget_g(keys))
 
     def reset_stats(self) -> None:
         with self._stats_lock:
@@ -832,21 +918,33 @@ class KVNamespace:
                 setattr(st, name, getattr(st, name) + delta)
 
     # -- object store -------------------------------------------------------
-    def put(self, key: str, value: Any, nbytes: int | None = None) -> None:
+    def put_g(self, key: str, value: Any, nbytes: int | None = None) -> Any:
         with _SinkScope(self):
-            self.parent.put(self._k(key), value, nbytes)
+            yield from self.parent.put_g(self._k(key), value, nbytes)
+
+    def put(self, key: str, value: Any, nbytes: int | None = None) -> None:
+        run_effects(self.clock, self.put_g(key, value, nbytes))
+
+    def put_if_absent_g(self, key: str, value: Any,
+                        nbytes: int | None = None) -> Any:
+        with _SinkScope(self):
+            return (yield from self.parent.put_if_absent_g(
+                self._k(key), value, nbytes))
 
     def put_if_absent(self, key: str, value: Any,
                       nbytes: int | None = None) -> bool:
-        with _SinkScope(self):
-            return self.parent.put_if_absent(self._k(key), value, nbytes)
+        return run_effects(self.clock,
+                           self.put_if_absent_g(key, value, nbytes))
 
-    def get(self, key: str) -> Any:
+    def get_g(self, key: str) -> Any:
         with _SinkScope(self):
             try:
-                return self.parent.get(self._k(key))
+                return (yield from self.parent.get_g(self._k(key)))
             except KeyError:
                 raise KeyError(key) from None
+
+    def get(self, key: str) -> Any:
+        return run_effects(self.clock, self.get_g(key))
 
     def exists(self, key: str) -> bool:
         return self.parent.exists(self._k(key))
@@ -854,25 +952,56 @@ class KVNamespace:
     def delete(self, key: str) -> None:
         self.parent.delete(self._k(key))
 
-    def mget(self, keys: Iterable[str]) -> list[Any]:
+    def mget_g(self, keys: Iterable[str]) -> Any:
         with _SinkScope(self):
-            return self.parent.mget([self._k(k) for k in keys])
+            return (yield from self.parent.mget_g(
+                [self._k(k) for k in keys]))
+
+    def mget(self, keys: Iterable[str]) -> list[Any]:
+        return run_effects(self.clock, self.mget_g(keys))
 
     def stripes_for(self, nbytes: int) -> int:
         return self.parent.stripes_for(nbytes)
 
     # -- fan-in counters ----------------------------------------------------
-    def register_counter(self, counter_id: str, width: int) -> None:
-        self.parent.register_counter(self._k(counter_id), width)
+    def register_counter_g(self, counter_id: str, width: int) -> Any:
+        yield from self.parent.register_counter_g(self._k(counter_id), width)
 
-    def register_counters(self, widths: Mapping[str, int]) -> None:
-        self.parent.register_counters(
+    def register_counter(self, counter_id: str, width: int) -> None:
+        run_effects(self.clock, self.register_counter_g(counter_id, width))
+
+    def register_counters_g(self, widths: Mapping[str, int]) -> Any:
+        yield from self.parent.register_counters_g(
             {self._k(cid): width for cid, width in widths.items()})
 
-    def increment_dependency(self, counter_id: str, edge_id: str) -> int:
+    def register_counters(self, widths: Mapping[str, int]) -> None:
+        run_effects(self.clock, self.register_counters_g(widths))
+
+    def increment_dependency_g(self, counter_id: str, edge_id: str) -> Any:
         with _SinkScope(self):
-            return self.parent.increment_dependency(
-                self._k(counter_id), edge_id)
+            return (yield from self.parent.increment_dependency_g(
+                self._k(counter_id), edge_id))
+
+    def increment_dependency(self, counter_id: str, edge_id: str) -> int:
+        return run_effects(
+            self.clock, self.increment_dependency_g(counter_id, edge_id))
+
+    def deposit_and_increment_g(
+        self,
+        counter_id: str,
+        edge_id: str,
+        items: "dict[str, Any]",
+        expected: "tuple[str, ...]" = (),
+    ) -> Any:
+        with _SinkScope(self):
+            count, missing = yield from self.parent.deposit_and_increment_g(
+                self._k(counter_id),
+                edge_id,
+                {self._k(k): v for k, v in items.items()},
+                tuple(self._k(k) for k in expected),
+            )
+        plen = len(self._prefix)
+        return count, [k[plen:] for k in missing]
 
     def deposit_and_increment(
         self,
@@ -881,15 +1010,8 @@ class KVNamespace:
         items: "dict[str, Any]",
         expected: "tuple[str, ...]" = (),
     ) -> "tuple[int, list[str]]":
-        with _SinkScope(self):
-            count, missing = self.parent.deposit_and_increment(
-                self._k(counter_id),
-                edge_id,
-                {self._k(k): v for k, v in items.items()},
-                tuple(self._k(k) for k in expected),
-            )
-        plen = len(self._prefix)
-        return count, [k[plen:] for k in missing]
+        return run_effects(self.clock, self.deposit_and_increment_g(
+            counter_id, edge_id, items, expected))
 
     def counter_value(self, counter_id: str) -> int:
         return self.parent.counter_value(self._k(counter_id))
@@ -913,9 +1035,12 @@ class KVNamespace:
         ``ShardedKVStore.drop_namespace``)."""
         return self.parent.drop_namespace(self.name)
 
-    def publish(self, channel: str, message: Any) -> None:
+    def publish_g(self, channel: str, message: Any) -> Any:
         with _SinkScope(self):
-            self.parent.publish(self._k(channel), message)
+            yield from self.parent.publish_g(self._k(channel), message)
+
+    def publish(self, channel: str, message: Any) -> None:
+        run_effects(self.clock, self.publish_g(channel, message))
 
     # -- stats --------------------------------------------------------------
     def reset_stats(self) -> None:

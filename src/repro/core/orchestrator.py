@@ -373,6 +373,13 @@ class JobOrchestrator:
         # Kept for introspection (tests, notebooks): the substrate the
         # most recent run() executed on.
         self.last_substrate = substrate
+        return substrate.clock.run(self._run_g(jobs, substrate))
+
+    def _run_g(self, jobs: "list[JobRequest]", substrate: Substrate):
+        """The dispatcher as an effect generator: the clock drives it as
+        the root continuation (event substrate) or inline on the calling
+        actor thread (thread/realtime substrates)."""
+        cfg = self.config
         clock = substrate.clock
         tenant_memory = {t.name: t.memory_mb for t in cfg.workload.tenants}
 
@@ -384,79 +391,78 @@ class JobOrchestrator:
         isolated_stats: "list[tuple[str, dict[str, Any]]]" = []
         n_running = 0
 
-        with clock.actor():
-            done_q = clock.queue()
+        done_q = clock.queue()
 
-            def launch(job: JobRequest) -> None:
-                admit_ms = clock.now_ms()
-                sub = substrate.job_substrate(job.name, job.tenant)
+        def launch(job: JobRequest) -> None:
+            admit_ms = clock.now_ms()
+            sub = substrate.job_substrate(job.name, job.tenant)
 
-                def runner() -> None:
-                    start_ms = clock.now_ms()
-                    rep, error = None, None
-                    try:
-                        engine = WukongEngine(cfg.engine)
-                        rep = engine.compute(job.build_dag(), substrate=sub)
-                    except Exception as exc:  # JobError, task bugs: record
-                        error = repr(exc)
-                    done_q.put((job, admit_ms, start_ms, clock.now_ms(),
-                                rep, error, sub))
-
-                clock.spawn(runner, name=job.name)
-
-            while len(records) < len(jobs):
-                now = clock.now_ms()
-                while pending and pending[0].arrival_ms <= now:
-                    ready.append(pending.popleft())
-                while ready and n_running < cfg.max_concurrent_jobs:
-                    job = self._pick_next(ready, tenant_running)
-                    ready.remove(job)
-                    tenant_running[job.tenant] = (
-                        tenant_running.get(job.tenant, 0) + 1)
-                    n_running += 1
-                    launch(job)
+            def runner():
+                start_ms = clock.now_ms()
+                rep, error = None, None
                 try:
-                    if pending:
-                        wait_s = (pending[0].arrival_ms - clock.now_ms()) / 1e3
-                        msg = done_q.get(timeout=max(0.0, wait_s))
-                    else:
-                        msg = done_q.get()
-                except _queue.Empty:
-                    continue  # an arrival came due
-                job, admit_ms, start_ms, end_ms, rep, error, sub = msg
-                tenant_running[job.tenant] -= 1
-                n_running -= 1
-                rec: "dict[str, Any]" = {
-                    "job_id": job.job_id,
-                    "tenant": job.tenant,
-                    "app": job.app,
-                    "size": job.size,
-                    "arrival_ms": job.arrival_ms,
-                    "admit_ms": admit_ms,
-                    "end_ms": end_ms,
-                    "latency_s": (end_ms - job.arrival_ms) / 1e3,
-                    "queue_wait_s": (admit_ms - job.arrival_ms) / 1e3,
-                    "error": error,
-                }
-                if rep is not None:
-                    rec["tasks"] = rep.tasks
-                    rec["executors"] = rep.executors_invoked
-                if cfg.isolate_platform and sub.platform is not None:
-                    # Private platform: its counters ARE this job's.
-                    isolated_stats.append(
-                        (job.tenant, sub.platform.snapshot()))
-                records.append(rec)
-                # Reclaim the finished job's namespaced objects/counters
-                # from the shared store: memory stays O(concurrent
-                # jobs), not O(total traffic). Host-side (no clock
-                # charge); any straggler residue is bounded by the
-                # job's stop signal.
-                sub.kv.purge()
+                    engine = WukongEngine(cfg.engine)
+                    rep = yield from engine.compute_g(job.build_dag(), sub)
+                except Exception as exc:  # JobError, task bugs: record
+                    error = repr(exc)
+                done_q.put((job, admit_ms, start_ms, clock.now_ms(),
+                            rep, error, sub))
 
-            # All jobs done; counters are stable (we hold the run token).
-            report = self._reduce(jobs, records, substrate, tenant_memory,
-                                  isolated_stats)
-        return report
+            clock.spawn(runner, name=job.name)
+
+        while len(records) < len(jobs):
+            now = clock.now_ms()
+            while pending and pending[0].arrival_ms <= now:
+                ready.append(pending.popleft())
+            while ready and n_running < cfg.max_concurrent_jobs:
+                job = self._pick_next(ready, tenant_running)
+                ready.remove(job)
+                tenant_running[job.tenant] = (
+                    tenant_running.get(job.tenant, 0) + 1)
+                n_running += 1
+                launch(job)
+            try:
+                if pending:
+                    wait_s = (pending[0].arrival_ms - clock.now_ms()) / 1e3
+                    msg = yield ("get", done_q, max(0.0, wait_s))
+                else:
+                    msg = yield ("get", done_q, None)
+            except _queue.Empty:
+                continue  # an arrival came due
+            job, admit_ms, start_ms, end_ms, rep, error, sub = msg
+            tenant_running[job.tenant] -= 1
+            n_running -= 1
+            rec: "dict[str, Any]" = {
+                "job_id": job.job_id,
+                "tenant": job.tenant,
+                "app": job.app,
+                "size": job.size,
+                "arrival_ms": job.arrival_ms,
+                "admit_ms": admit_ms,
+                "end_ms": end_ms,
+                "latency_s": (end_ms - job.arrival_ms) / 1e3,
+                "queue_wait_s": (admit_ms - job.arrival_ms) / 1e3,
+                "error": error,
+            }
+            if rep is not None:
+                rec["tasks"] = rep.tasks
+                rec["executors"] = rep.executors_invoked
+            if cfg.isolate_platform and sub.platform is not None:
+                # Private platform: its counters ARE this job's.
+                isolated_stats.append(
+                    (job.tenant, sub.platform.snapshot()))
+            records.append(rec)
+            # Reclaim the finished job's namespaced objects/counters
+            # from the shared store: memory stays O(concurrent
+            # jobs), not O(total traffic). Host-side (no clock
+            # charge); any straggler residue is bounded by the
+            # job's stop signal.
+            sub.kv.purge()
+
+        # All jobs done; counters are stable (the substrate serializes
+        # this reduction against any leftover actors).
+        return self._reduce(jobs, records, substrate, tenant_memory,
+                            isolated_stats)
 
     # -- report reduction ---------------------------------------------------
     def _reduce(self, jobs, records, substrate, tenant_memory,

@@ -28,6 +28,7 @@ memory sweep a genuine cost-vs-latency trade-off.
 """
 from __future__ import annotations
 
+from types import GeneratorType
 from typing import Any, Callable
 
 from repro.core.kvstore import CostModel
@@ -129,6 +130,31 @@ class FaaSPlatform:
             try:
                 with charge_meter(acc):
                     body()
+            finally:
+                self.meter.add_invocation(acc[0], memory_mb=memory_mb,
+                                          key=function)
+                self.pool.release(function, container_id)
+                self.throttle.release()
+
+        return invocation
+
+    def wrap_g(self, function: str, container_id: int,
+               body: Callable[[], Any]) -> Callable[[], Any]:
+        """Effect-protocol sibling of ``wrap``: the returned zero-arg
+        callable is a generator function, so it composes with bodies
+        that are themselves effect generators (the event substrate's
+        executor bodies). Metering and release semantics are identical
+        to ``wrap``."""
+
+        memory_mb = self.memory_mb(function)
+
+        def invocation():
+            acc = [0.0]
+            try:
+                with charge_meter(acc):
+                    r = body()
+                    if isinstance(r, GeneratorType):
+                        yield from r
             finally:
                 self.meter.add_invocation(acc[0], memory_mb=memory_mb,
                                           key=function)

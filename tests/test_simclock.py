@@ -26,7 +26,12 @@ from repro.core import (
     JobError,
     WukongEngine,
 )
-from repro.core.simclock import RealtimeClock, VirtualClock, clock_for_scale
+from repro.core.simclock import (
+    EventClock,
+    RealtimeClock,
+    VirtualClock,
+    clock_for_scale,
+)
 from repro.apps import tree_reduction_dag
 from repro.apps.tree_reduction import tree_reduction_expected
 
@@ -38,8 +43,14 @@ from repro.apps.tree_reduction import tree_reduction_expected
 
 class TestVirtualClockPrimitives:
     def test_mode_selection(self):
-        assert isinstance(clock_for_scale(0.0), VirtualClock)
+        # Event-driven is the default zero-scale substrate; the
+        # thread-per-actor VirtualClock stays as the cross-check mode.
+        assert isinstance(clock_for_scale(0.0), EventClock)
+        assert isinstance(clock_for_scale(0.0, "thread"), VirtualClock)
+        assert isinstance(clock_for_scale(0.0, "event"), EventClock)
         assert isinstance(clock_for_scale(0.1), RealtimeClock)
+        with pytest.raises(ValueError):
+            clock_for_scale(0.0, "bogus")
 
     def test_charge_outside_actor_accumulates_without_advancing(self):
         clock = VirtualClock()

@@ -1,0 +1,297 @@
+"""Event-driven vs thread-per-actor substrate equivalence (PR 6).
+
+The tentpole property: swapping the simulation substrate changes ONLY
+how actors are executed (continuations on the clock's ready queue vs
+one OS thread per actor) — every simulated quantity is bit-identical.
+``CostModel.substrate`` selects the mode ("event" is the default;
+"thread" is the cross-check mode, the same role ``RealtimeClock``
+plays for the virtual clock as a whole).
+
+Also here: the EventClock primitive semantics (effect protocol), the
+worker-cache drain hook, and the slow-marked 10^5-task scale test.
+"""
+import queue
+import threading
+
+import pytest
+
+from repro.apps import tree_reduction_dag
+from repro.apps.tree_reduction import tree_reduction_expected
+from repro.core import (
+    CostModel,
+    EngineConfig,
+    FaultConfig,
+    JobOrchestrator,
+    OrchestratorConfig,
+    TenantSpec,
+    WorkloadConfig,
+    WukongEngine,
+    drain_worker_cache,
+    worker_cache_size,
+)
+from repro.core.simclock import EventClock, run_effects
+from repro.platform import PlatformConfig
+
+SUBSTRATES = ("event", "thread")
+
+
+# ---------------------------------------------------------------------------
+# EventClock primitives (the effect protocol)
+# ---------------------------------------------------------------------------
+
+
+class TestEventClockPrimitives:
+    def test_charge_advances_and_run_returns(self):
+        clock = EventClock()
+
+        def main():
+            yield ("charge", 250.0)
+            yield ("charge", 125.0)
+            return clock.now_ms()
+
+        assert clock.run(main()) == 375.0
+        assert clock.charged_ms == 375.0
+
+    def test_sleepers_wake_in_deadline_order(self):
+        clock = EventClock()
+        wakes = []
+
+        def sleeper(ms):
+            def body():
+                yield ("sleep", ms)
+                wakes.append((ms, clock.now_ms()))
+            return body
+
+        for ms in (300.0, 100.0, 200.0):
+            clock.spawn(sleeper(ms), name=f"s{ms}")
+
+        def main():
+            yield ("sleep", 400.0)
+
+        clock.run(main())
+        assert wakes == [(100.0, 100.0), (200.0, 200.0), (300.0, 300.0)]
+
+    def test_queue_get_timeout_is_simulated(self):
+        clock = EventClock()
+        q = clock.queue()
+
+        def main():
+            try:
+                yield ("get", q, 3600.0)  # one simulated hour
+            except queue.Empty:
+                return clock.now_ms()
+            raise AssertionError("get should have timed out")
+
+        assert clock.run(main()) == pytest.approx(3600e3)
+
+    def test_queue_put_wakes_blocked_actor(self):
+        clock = EventClock()
+        q = clock.queue()
+        got = []
+
+        def consumer():
+            got.append((yield ("get", q, 60.0)))
+
+        clock.spawn(consumer, name="consumer")
+
+        def main():
+            yield ("charge", 5.0)  # let the consumer park first
+            q.put("payload")
+            yield ("charge", 1.0)
+
+        clock.run(main())
+        assert got == ["payload"]
+        assert clock.now_ms() < 60e3  # woken by the put, not the timeout
+
+    def test_lock_contention_charges_waiters_for_the_hold(self):
+        clock = EventClock()
+        lane = clock.lock()
+        spans = []
+
+        def transfer():
+            yield ("acquire", lane)
+            t0 = clock.now_ms()
+            yield ("charge", 100.0)
+            spans.append((t0, clock.now_ms()))
+            lane.release()
+
+        for _ in range(3):
+            clock.spawn(transfer, name="t")
+
+        def main():
+            yield ("sleep", 1000.0)
+
+        clock.run(main())
+        assert spans == [(0.0, 100.0), (100.0, 200.0), (200.0, 300.0)]
+
+    def test_event_wait_timeout_and_set(self):
+        clock = EventClock()
+        ev = clock.event()
+
+        def main():
+            flag = yield ("wait", ev, 0.5)  # simulated 500 ms
+            assert flag is False
+            assert clock.now_ms() == pytest.approx(500.0)
+            ev.set()
+            flag = yield ("wait", ev, 0.5)
+            assert flag is True
+            return clock.now_ms()
+
+        assert clock.run(main()) == pytest.approx(500.0)  # no extra wait
+
+    def test_flush_applies_deferred_direct_charges(self):
+        # Non-yieldable code (simulated_compute inside task fns) calls
+        # clock.charge() directly: billed immediately, time advance
+        # deferred until the frame's next ("flush",).
+        clock = EventClock()
+
+        def main():
+            clock.charge(42.0)
+            assert clock.charged_ms == 42.0
+            assert clock.now_ms() == 0.0  # not yet advanced
+            yield ("flush",)
+            return clock.now_ms()
+
+        assert clock.run(main()) == 42.0
+
+    def test_external_thread_drives_effects_blockingly(self):
+        # run_effects is the bridge for code running on a real OS thread
+        # (the same generator protocol, mapped onto blocking waits).
+        clock = EventClock()
+        q = clock.queue()
+        out = []
+
+        def external():
+            def gen():
+                out.append((yield ("get", q, 5.0)))
+            run_effects(clock, gen())
+
+        t = threading.Thread(target=external)
+        t.start()
+
+        def main():
+            yield ("charge", 1.0)
+            q.put(42)
+
+        clock.run(main())
+        t.join(timeout=5.0)
+        assert out == [42]
+
+
+# ---------------------------------------------------------------------------
+# Worker-cache hygiene (pool workers parked between jobs)
+# ---------------------------------------------------------------------------
+
+
+class TestWorkerCache:
+    def test_drain_resets_cache_between_runs(self):
+        # Thread-substrate runs park finished pool workers in the
+        # process-global cache; drain dispatches their shutdown sentinel
+        # so benchmark iterations / test runs start cold.
+        cfg = EngineConfig(cost=CostModel(substrate="thread"))
+        rep = WukongEngine(cfg).compute(tree_reduction_dag(16))
+        assert rep.tasks == 15
+        assert worker_cache_size() > 0
+        assert drain_worker_cache() > 0
+        assert worker_cache_size() == 0
+        assert drain_worker_cache() == 0  # idempotent
+        # and the substrate still works after a drain
+        rep = WukongEngine(cfg).compute(tree_reduction_dag(16))
+        assert rep.tasks == 15
+        drain_worker_cache()
+
+
+# ---------------------------------------------------------------------------
+# Substrate equivalence: identical simulated quantities
+# ---------------------------------------------------------------------------
+
+
+def _run(substrate: str, **cost_kw) -> "tuple":
+    """The fig07-style smoke workload: latency jitter, cold starts,
+    fault injection with retry backoff — every stochastic knob on."""
+    cfg = EngineConfig(
+        cost=CostModel(invoke_sigma=0.3, warm_fraction=0.7, latency_seed=7,
+                       substrate=substrate, **cost_kw),
+        faults=FaultConfig(task_failure_prob=0.04, max_retries=2, seed=21,
+                           retry_backoff_base_ms=1000.0),
+    )
+    dag = tree_reduction_dag(64, compute_ms=250.0, payload_bytes=1 << 16)
+    return WukongEngine(cfg).compute(dag)
+
+
+class TestSubstrateEquivalence:
+    def test_fig07_workload_bit_identical(self):
+        reps = {s: _run(s) for s in SUBSTRATES}
+        a, b = reps["event"], reps["thread"]
+        (ka, va), = a.results.items()
+        (kb, vb), = b.results.items()
+        assert ka == kb and va[0] == vb[0] == tree_reduction_expected(64)
+        assert a.charged_ms == b.charged_ms
+        assert a.wall_s == b.wall_s
+        assert a.kv_stats == b.kv_stats
+        assert a.executors_invoked == b.executors_invoked
+
+    def test_fig14_platform_workload_bit_identical(self):
+        # The stateful-platform path: warm pool, throttle, billing meter
+        # — platform_stats (incl. billed USD) must agree bit-for-bit.
+        def run(substrate):
+            cfg = EngineConfig(
+                cost=CostModel(cold_start_ms=250.0, substrate=substrate),
+                platform=PlatformConfig(keep_alive_s=600.0),
+                num_initial_invokers=4, num_proxy_invokers=4,
+            )
+            return WukongEngine(cfg).compute(
+                tree_reduction_dag(64, compute_ms=25.0))
+
+        a, b = run("event"), run("thread")
+        assert a.charged_ms == b.charged_ms
+        assert a.wall_s == b.wall_s
+        assert a.kv_stats == b.kv_stats
+        assert a.platform_stats == b.platform_stats
+        assert a.platform_stats["billed_usd"] > 0
+
+    def test_orchestrator_workload_bit_identical(self):
+        # N concurrent jobs on one shared clock/store/platform.
+        def run(substrate):
+            cfg = OrchestratorConfig(
+                engine=EngineConfig(
+                    cost=CostModel(substrate=substrate),
+                    num_initial_invokers=4, num_proxy_invokers=4),
+                workload=WorkloadConfig(
+                    n_jobs=8, arrival_rate_per_s=4.0, seed=0,
+                    tenants=(TenantSpec("t-a", 1792),
+                             TenantSpec("t-b", 896)),
+                    app_mix=(("tree_reduction", 1.0),), compute_ms=10.0),
+                max_concurrent_jobs=4)
+            return JobOrchestrator(cfg).run()
+
+        a, b = run("event"), run("thread")
+        assert a.completed == b.completed == 8 and a.failed == 0
+        assert a.makespan_s == b.makespan_s
+        assert a.billed_usd_total == b.billed_usd_total
+        assert a.per_tenant == b.per_tenant
+        assert a.job_records == b.job_records
+
+
+# ---------------------------------------------------------------------------
+# Scale: the event substrate carries 10^5 tasks in seconds
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+class TestScale:
+    def test_100k_task_tree_reduction_under_wall_budget(self):
+        import time
+
+        n = 131072  # 131071 tasks
+        dag = tree_reduction_dag(n, compute_ms=1.0)
+        cfg = EngineConfig(max_concurrency=n, job_timeout_s=1e6,
+                           record_metrics=False)
+        t0 = time.perf_counter()
+        rep = WukongEngine(cfg).compute(dag)
+        wall = time.perf_counter() - t0
+        (_, v), = rep.results.items()
+        assert v[0] == tree_reduction_expected(n)
+        assert rep.tasks == n - 1
+        assert rep.metrics == []  # record_metrics=False
+        assert wall < 30.0
