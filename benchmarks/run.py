@@ -292,6 +292,7 @@ def main() -> None:
         fig14_platform,
         fig15_multitenant,
         fig16_scaling,
+        fig17_recovery,
     )
     from benchmarks import common
 
@@ -351,6 +352,17 @@ def main() -> None:
                   dict(micro_leaves=(1024, 4096, 16384),
                        engine_tiers=((8192, True), (131072, False),
                                      (1 << 20, False)))),
+        # Crash-recovery cost curves (durable control plane). The smoke
+        # sweep crashes the dispatcher at all three protocol points on
+        # BOTH simulation substrates and gates on journal billing parity.
+        "fig17": (fig17_recovery.run,
+                  dict(n_jobs=12, rate=8.0, crash_ats=(2,),
+                       substrates=("event", "thread"),
+                       max_concurrent_jobs=4),
+                  dict(n_jobs=32, rate=8.0, crash_ats=(1, 4),
+                       substrates=("event", "thread"),
+                       max_concurrent_jobs=8),
+                  dict(n_jobs=64, crash_ats=(1, 4, 16))),
     }
     mode = 0 if args.smoke else (1 if args.quick else 2)
     only = set(args.only.split(",")) if args.only else None
@@ -397,6 +409,8 @@ def main() -> None:
         _check_multitenant_gate(rows_by_fig, figs["fig15"][1])
         if "fig16" in rows_by_fig:
             fig16_scaling.check_gates(rows_by_fig["fig16"])
+        if "fig17" in rows_by_fig:
+            fig17_recovery.check_gates(rows_by_fig["fig17"])
 
 
 if __name__ == "__main__":

@@ -15,17 +15,35 @@ from repro.core.engine import (
     StrawmanEngine,
     WukongEngine,
 )
-from repro.core.faults import FaultConfig, SimulatedTaskFailure
+from repro.core.faults import (
+    FaultConfig,
+    FaultInjector,
+    FaultStats,
+    SimulatedTaskFailure,
+)
 from repro.core.kvstore import CostModel, KVNamespace, ShardedKVStore
 from repro.core.orchestrator import (
     JobOrchestrator,
     JobRequest,
     OrchestratorConfig,
+    OrchestratorCrashed,
     OrchestratorReport,
     Substrate,
     TenantSpec,
     WorkloadConfig,
     generate_workload,
+)
+from repro.core.statemachine import (
+    ADMITTED,
+    CANCELLED,
+    COMPLETED,
+    CONTROL_NS,
+    FAILED,
+    PENDING,
+    RUNNING,
+    TERMINAL_STATES,
+    InvalidTransition,
+    JobStateMachine,
 )
 from repro.core.optimize import (
     ALL_PASSES,
@@ -65,11 +83,14 @@ __all__ = [
     "JobError", "JobReport", "JobSubstrate", "WukongEngine",
     "StrawmanEngine", "PubSubEngine", "ParallelInvokerEngine",
     "ServerfulEngine",
-    "FaultConfig", "SimulatedTaskFailure", "CostModel", "ShardedKVStore",
-    "KVNamespace",
+    "FaultConfig", "FaultInjector", "FaultStats", "SimulatedTaskFailure",
+    "CostModel", "ShardedKVStore", "KVNamespace",
     "JobOrchestrator", "JobRequest", "OrchestratorConfig",
-    "OrchestratorReport", "Substrate", "TenantSpec", "WorkloadConfig",
-    "generate_workload",
+    "OrchestratorCrashed", "OrchestratorReport", "Substrate", "TenantSpec",
+    "WorkloadConfig", "generate_workload",
+    "JobStateMachine", "InvalidTransition", "CONTROL_NS",
+    "PENDING", "ADMITTED", "RUNNING", "COMPLETED", "FAILED", "CANCELLED",
+    "TERMINAL_STATES",
     "StaticSchedule", "generate_static_schedules",
     "OptimizeConfig", "CompiledDAG", "PassStats", "compile_dag",
     "ALL_PASSES", "NO_PASSES",

@@ -42,7 +42,12 @@ from repro.core.executor import (
     TaskExecutor,
     TaskMetrics,
 )
-from repro.core.faults import FaultConfig, FaultInjector, HeartbeatRegistry
+from repro.core.faults import (
+    FaultConfig,
+    FaultInjector,
+    FaultStats,
+    HeartbeatRegistry,
+)
 from repro.core.invoker import FanoutProxy, InvokerPool
 from repro.core.kvstore import CostModel, ShardedKVStore, sizeof
 from repro.core.optimize import OptimizeConfig, PassStats, ensure_compiled
@@ -94,6 +99,16 @@ class JobSubstrate:
                     the account but never each other's containers, and
                     billing is attributable per tenant).
 
+    ``job``       — billing attribution label: invocations run for this
+                    substrate are tagged with it in the platform's
+                    billing meter, so per-JOB billed USD survives an
+                    orchestrator crash (the journal records it) and is
+                    auditable on a shared account.
+    ``resume``    — crash recovery: executors probe the store for a
+                    durable task output before executing and reuse it,
+                    so a re-admitted job never re-executes (or re-bills
+                    the compute of) journaled-complete work.
+
     When a substrate is injected the engine creates none of the above
     and ignores ``EngineConfig.platform``; everything else (invoker
     pools, runtime pool, schedules, monitors) stays per-job.
@@ -102,6 +117,8 @@ class JobSubstrate:
     kv: Any
     platform: "FaaSPlatform | None" = None
     function: str = "executor"
+    job: "str | None" = None
+    resume: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -157,6 +174,10 @@ class JobReport:
     # concurrency, billed USD (pool mode); invoker cold-start counts in
     # every mode (the InvokerPool counter was previously dropped).
     platform_stats: dict[str, Any] = dataclasses.field(default_factory=dict)
+    # Fault/retry observability (faults.FaultStats snapshot + the invoker
+    # pools' 429-retry tally): task attempts, injected failures, retries,
+    # speculative duplicates, throttle retries, resumed tasks.
+    fault_stats: dict[str, int] = dataclasses.field(default_factory=dict)
 
 
 def _platform_stats(platform: "FaaSPlatform | None",
@@ -292,6 +313,7 @@ class WukongEngine:
         metrics = TaskMetrics(clock, enabled=cfg.record_metrics)
         heartbeats = HeartbeatRegistry()
         faults = FaultInjector(cfg.faults)
+        fault_stats = FaultStats()
         pool = clock.pool(cfg.max_concurrency)
         # Self-contained: one platform instance per job (initial and
         # proxy invokers share the cap and container pool). Injected:
@@ -301,13 +323,14 @@ class WukongEngine:
             platform = substrate.platform
         else:
             platform = _make_platform(cfg.platform, cfg.cost, clock)
+        job = substrate.job if substrate is not None else None
         initial_invokers = InvokerPool(
             cfg.num_initial_invokers, cfg.cost, clock, pool, name="init",
-            platform=platform, function=function,
+            platform=platform, function=function, job=job,
         )
         proxy_invokers = InvokerPool(
             cfg.num_proxy_invokers, cfg.cost, clock, pool, name="proxy",
-            platform=platform, function=function,
+            platform=platform, function=function, job=job,
         )
         proxy = FanoutProxy(kv, proxy_invokers) if cfg.use_proxy else None
         # Per-job stop signal: set at teardown (success OR failure)
@@ -351,6 +374,8 @@ class WukongEngine:
             compute_clock=(platform.compute_clock(clock, function)
                            if platform is not None else None),
             stop=stop_job,
+            resume=substrate.resume if substrate is not None else False,
+            fault_stats=fault_stats,
         )
 
         waiter = _ResultWaiter(kv, dag.roots)
@@ -406,8 +431,20 @@ class WukongEngine:
             optimizer=getattr(dag, "pass_stats", ()),
             platform_stats=_platform_stats(
                 platform, [initial_invokers, proxy_invokers]),
+            fault_stats=_merge_fault_stats(
+                fault_stats, [initial_invokers, proxy_invokers]),
         )
         return report
+
+
+def _merge_fault_stats(fault_stats: FaultStats,
+                       pools: "list[InvokerPool]") -> dict[str, int]:
+    """The JobReport fault/retry block: executor-side counters plus the
+    invoker pools' 429-throttle retry tally (counted at the invoker lane,
+    where the retry loop lives)."""
+    stats = fault_stats.snapshot()
+    stats["throttle_retries"] += sum(p.throttle_retries for p in pools)
+    return stats
 
 
 def _executor_body(ctx, schedule, start_key, seed_cache, attempt, parent=None):
@@ -447,6 +484,7 @@ def _speculative_monitor(ctx, stop, cfg, schedule_set, clock):
                 for key in hb.start_keys or (hb.start_key,):
                     sched = schedule_set.covering_schedule(key)
                     if sched is not None:
+                        ctx.fault_stats.bump("speculative_duplicates")
                         yield from ctx.spawn(key, {}, sched, width=1,
                                              attempt=1, parent=hb.parent)
 
@@ -513,8 +551,10 @@ class _CentralizedEngine:
             platform = substrate.platform
         else:
             platform = _make_platform(cfg.platform, cfg.cost, clock)
-        invokers = InvokerPool(cfg.num_invokers, cfg.cost, clock, pool,
-                               platform=platform, function=function)
+        invokers = InvokerPool(
+            cfg.num_invokers, cfg.cost, clock, pool, platform=platform,
+            function=function,
+            job=substrate.job if substrate is not None else None)
         compute_clock = (platform.compute_clock(clock, function)
                          if platform is not None else clock)
         done_q = clock.queue()
@@ -625,6 +665,7 @@ class _CentralizedEngine:
             charged_ms=clock.charged_ms - charged0,
             optimizer=getattr(dag, "pass_stats", ()),
             platform_stats=_platform_stats(platform, [invokers]),
+            fault_stats=_merge_fault_stats(FaultStats(), [invokers]),
         )
         return report
 

@@ -42,6 +42,7 @@ from repro.core.dag import DAG, TaskRef
 from repro.core.faults import (
     ExecutorHeartbeat,
     FaultInjector,
+    FaultStats,
     HeartbeatRegistry,
     SimulatedTaskFailure,
 )
@@ -100,6 +101,8 @@ class ExecutorContext:
         batch_kv_round_trips: bool = True,
         compute_clock: Any = None,
         stop: Any = None,
+        resume: bool = False,
+        fault_stats: "FaultStats | None" = None,
     ):
         self.dag = dag
         self.kv = kv
@@ -125,6 +128,12 @@ class ExecutorContext:
         # abandoned job stops consuming shared warm-pool / throttle /
         # lane capacity instead of running its walk to the end.
         self.stop = stop
+        # Resumed job (crash recovery): executors probe the store for a
+        # durable output before executing each task and reuse it instead
+        # of recomputing — journaled-complete work is never re-executed.
+        self.resume = resume
+        # Shared per-job fault/retry observability counters (JobReport).
+        self.fault_stats = fault_stats or FaultStats()
         self._id_lock = threading.Lock()
         self._next_id = 0
 
@@ -248,6 +257,7 @@ class TaskExecutor:
                 backoff = self.ctx.faults.retry_backoff_ms(self.attempt)
                 if backoff > 0:
                     yield ("charge", backoff)
+                self.ctx.fault_stats.bump("task_retries")
                 # Lambda automatic retry: fresh container. Only the failing
                 # start re-runs on the incremented attempt; completed walks
                 # are durable (idempotent deposits/spawns), and un-walked
@@ -372,36 +382,56 @@ class TaskExecutor:
                     f"executor schedule {self.schedule.leaf!r} does not "
                     f"cover task {current!r}"
                 )
-            args, kwargs, read_ms = yield from self._gather_inputs_g(current)
-            hb = ExecutorHeartbeat(
-                executor_id=self.executor_id,
-                start_key=self.start_key,
-                current_key=current,
-                started_at=clock.now_ms(),
-                parent=self.parent,
-                start_keys=self.start_keys,
-            )
-            self.ctx.heartbeats.beat(hb)
+            resumed = False
+            read_ms = 0.0
+            compute_ms = 0.0
+            if self.ctx.resume:
+                # Crash recovery: a prior generation may already have
+                # executed this task durably. One charged probe round
+                # trip; on a hit the output is fetched (charged) and the
+                # execution — and its fault injection — is skipped, so
+                # journaled-complete work is never re-executed.
+                yield ("charge", kv.cost.kv_base_ms)
+                if kv.exists(current):
+                    out = yield from kv.get_g(current)
+                    resumed = True
+                    self.ctx.fault_stats.bump("tasks_resumed")
 
-            if self.ctx.faults.should_fail(current, self.attempt):
-                raise SimulatedTaskFailure(current)
-            straggle = self.ctx.faults.straggle_ms(current, self.attempt)
-            if straggle > 0:
-                yield ("charge", straggle)
+            if not resumed:
+                args, kwargs, read_ms = yield from self._gather_inputs_g(
+                    current)
+                hb = ExecutorHeartbeat(
+                    executor_id=self.executor_id,
+                    start_key=self.start_key,
+                    current_key=current,
+                    started_at=clock.now_ms(),
+                    parent=self.parent,
+                    start_keys=self.start_keys,
+                )
+                self.ctx.heartbeats.beat(hb)
 
-            # The engine clock is installed for the duration of the task
-            # function so workload-declared compute (simulated_compute /
-            # per-flop costs) is charged as simulated time.
-            t0 = clock.now_ms()
-            with task_clock(self.ctx.compute_clock):
-                out = dag.tasks[current].fn(*args, **kwargs)
-            # Event substrate: compute charged inside the task function is
-            # deferred (the function cannot yield); flush it onto the clock
-            # before reading the delta. No-op on the thread substrates.
-            yield ("flush",)
-            compute_ms = clock.now_ms() - t0
+                self.ctx.fault_stats.bump("task_attempts")
+                if self.ctx.faults.should_fail(current, self.attempt):
+                    self.ctx.fault_stats.bump("injected_failures")
+                    raise SimulatedTaskFailure(current)
+                straggle = self.ctx.faults.straggle_ms(current, self.attempt)
+                if straggle > 0:
+                    yield ("charge", straggle)
+
+                # The engine clock is installed for the duration of the task
+                # function so workload-declared compute (simulated_compute /
+                # per-flop costs) is charged as simulated time.
+                t0 = clock.now_ms()
+                with task_clock(self.ctx.compute_clock):
+                    out = dag.tasks[current].fn(*args, **kwargs)
+                # Event substrate: compute charged inside the task function
+                # is deferred (the function cannot yield); flush it onto the
+                # clock before reading the delta. No-op on the thread
+                # substrates.
+                yield ("flush",)
+                compute_ms = clock.now_ms() - t0
+                self.tasks_executed += 1
             self.cache[current] = out
-            self.tasks_executed += 1
             # One sizeof walk per output, reused by metrics and as the
             # KV write's size hint (the store records it per key).
             out_nbytes = sizeof(out)
@@ -417,16 +447,19 @@ class TaskExecutor:
                     {"type": "result", "key": current},
                 )
                 self.ctx.metrics.record(
-                    task=current, event="executed", read_ms=read_ms,
-                    compute_ms=compute_ms, write_ms=write_ms,
-                    nbytes=out_nbytes, executor=self.executor_id,
+                    task=current,
+                    event="resumed" if resumed else "executed",
+                    read_ms=read_ms, compute_ms=compute_ms,
+                    write_ms=write_ms, nbytes=out_nbytes,
+                    executor=self.executor_id,
                 )
                 return
 
             self.ctx.metrics.record(
-                task=current, event="executed", read_ms=read_ms,
-                compute_ms=compute_ms, write_ms=0.0, nbytes=out_nbytes,
-                executor=self.executor_id,
+                task=current,
+                event="resumed" if resumed else "executed",
+                read_ms=read_ms, compute_ms=compute_ms, write_ms=0.0,
+                nbytes=out_nbytes, executor=self.executor_id,
             )
 
             # ---- fan-out operation (paper §IV-C) -------------------------

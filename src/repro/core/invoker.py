@@ -66,15 +66,21 @@ class InvokerPool:
         name: str = "invoker",
         platform: "FaaSPlatform | None" = None,
         function: str = "executor",
+        job: "str | None" = None,
     ):
         self.cost = cost
         self.clock = clock
         self.runtime_pool = runtime_pool
         self.platform = platform
         self.function = function
+        # Billing attribution: invocations issued by this pool are billed
+        # against this job label (the orchestrator passes the job's
+        # namespace name; None for self-contained single-job runs).
+        self.job = job
         self._q = clock.queue()
         self.invocations = 0
         self.cold_starts = 0
+        self.throttle_retries = 0
         self._lock = threading.Lock()
         self._closed = False
         self._n_lanes = max(1, n_invokers)
@@ -114,6 +120,8 @@ class InvokerPool:
                 return False
             yield ("charge", platform.backoff_ms(attempt))
             attempt += 1
+            with self._lock:
+                self.throttle_retries += 1
         # The invoke API round trip precedes container assignment (as on
         # the real platform), so a container released while this call is
         # in flight is warm for it; the cold-start provisioning delay is
@@ -126,7 +134,7 @@ class InvokerPool:
             yield ("charge", self.cost.cold_start_ms)
         try:
             self.runtime_pool.submit(
-                platform.wrap_g(self.function, cid, body)
+                platform.wrap_g(self.function, cid, body, job=self.job)
             )
         except RuntimeError:
             # Job resolved while this lane was mid-invoke: the body will

@@ -237,6 +237,8 @@ class KVStats:
     striped_puts: int = 0
     striped_gets: int = 0
     mget_batches: int = 0
+    journal_appends: int = 0
+    journal_scans: int = 0
 
     def snapshot(self) -> dict[str, int]:
         return dataclasses.asdict(self)
@@ -325,6 +327,14 @@ class ShardedKVStore:
         # that happen to contain the separator keep their placement.
         self._namespaces: set[str] = set()
         self._ns_lock = threading.Lock()
+        # Append-only journals (control-plane event logs), keyed by
+        # journal id. Entries are (payload, nbytes) in append order.
+        # Kept OUTSIDE shard.data: a journal is a log, not an object —
+        # it has no get/exists/delete surface and must survive the
+        # object-store observables (shard byte counts, purge sweeps
+        # measure *data-plane* state).
+        self._journals: dict[str, list[tuple[Any, int]]] = {}
+        self._journal_lock = threading.Lock()
         self.stats = KVStats()
         self._stats_lock = threading.Lock()
 
@@ -786,6 +796,51 @@ class ShardedKVStore:
     def publish(self, channel: str, message: Any) -> None:
         run_effects(self.clock, self.publish_g(channel, message))
 
+    # -- journals ----------------------------------------------------------
+    def journal_append_g(self, journal: str, entry: Any,
+                         nbytes: int | None = None) -> Any:
+        """Append ``entry`` to the named event journal. Charged like a
+        small put to the journal's home shard (base round trip + lane
+        transfer), because durability is not free — the control plane
+        pays the same store it shares with the data plane. Returns the
+        entry's sequence number (0-based)."""
+        if nbytes is None:
+            nbytes = sizeof(entry)
+        yield from self._pay_g(self._shard(journal), nbytes)
+        with self._journal_lock:
+            log = self._journals.setdefault(journal, [])
+            seq = len(log)
+            log.append((entry, nbytes))
+        self._bump(journal_appends=1, bytes_written=nbytes)
+        return seq
+
+    def journal_append(self, journal: str, entry: Any,
+                       nbytes: int | None = None) -> int:
+        return run_effects(self.clock,
+                           self.journal_append_g(journal, entry, nbytes))
+
+    def journal_scan_g(self, journal: str) -> Any:
+        """Read the full journal in append order. Charged one base round
+        trip plus the transfer of every recorded entry — replay cost
+        grows with journal length, which is exactly the recovery-time
+        observable fig17 sweeps. Missing journal reads as empty (a fresh
+        control plane has nothing to replay)."""
+        with self._journal_lock:
+            log = list(self._journals.get(journal, ()))
+        total = sum(nb for _, nb in log)
+        yield from self._pay_g(self._shard(journal), total)
+        self._bump(journal_scans=1, bytes_read=total)
+        return [entry for entry, _ in log]
+
+    def journal_scan(self, journal: str) -> list[Any]:
+        return run_effects(self.clock, self.journal_scan_g(journal))
+
+    def journal_len(self, journal: str) -> int:
+        """Host-side (uncharged) journal length — an observability probe,
+        not a simulated op."""
+        with self._journal_lock:
+            return len(self._journals.get(journal, ()))
+
     # -- bulk --------------------------------------------------------------
     def mget_g(self, keys: Iterable[str]) -> Any:
         """Pipelined multi-get: keys are grouped by shard and each shard
@@ -882,6 +937,9 @@ class ShardedKVStore:
         with self._chan_lock:
             for ch in [c for c in self._channels if c.startswith(prefix)]:
                 del self._channels[ch]
+        with self._journal_lock:
+            for j in [j for j in self._journals if j.startswith(prefix)]:
+                del self._journals[j]
         return removed
 
 
@@ -1041,6 +1099,28 @@ class KVNamespace:
 
     def publish(self, channel: str, message: Any) -> None:
         run_effects(self.clock, self.publish_g(channel, message))
+
+    # -- journals ------------------------------------------------------------
+    def journal_append_g(self, journal: str, entry: Any,
+                         nbytes: int | None = None) -> Any:
+        with _SinkScope(self):
+            return (yield from self.parent.journal_append_g(
+                self._k(journal), entry, nbytes))
+
+    def journal_append(self, journal: str, entry: Any,
+                       nbytes: int | None = None) -> int:
+        return run_effects(self.clock,
+                           self.journal_append_g(journal, entry, nbytes))
+
+    def journal_scan_g(self, journal: str) -> Any:
+        with _SinkScope(self):
+            return (yield from self.parent.journal_scan_g(self._k(journal)))
+
+    def journal_scan(self, journal: str) -> list[Any]:
+        return run_effects(self.clock, self.journal_scan_g(journal))
+
+    def journal_len(self, journal: str) -> int:
+        return self.parent.journal_len(self._k(journal))
 
     # -- stats --------------------------------------------------------------
     def reset_stats(self) -> None:

@@ -37,6 +37,17 @@ reuse, no shared cap. The fig15 benchmark compares the two.
 Everything runs on the shared clock's primitives, so a full sweep is
 bit-identical across runs (the fig15 smoke gate asserts this down to
 per-tenant billed USD).
+
+Durability (the durable control plane): the dispatcher journals every
+job lifecycle transition through a :class:`JobStateMachine` persisted
+in the shared store (``repro.core.statemachine``), so orchestration
+state is external to the process. ``FaultConfig.orchestrator_crash_*``
+kills the dispatcher at seeded points; a fresh orchestrator instance
+``recover()``s by replaying the journal — journaled-complete jobs are
+returned from their journal payloads (never re-executed, never
+re-billed), in-flight jobs are re-admitted with ``resume=True`` (their
+executors skip durably-completed tasks), and orphaned namespaces are
+purged. ``run_with_recovery`` drives the crash→recover loop end to end.
 """
 from __future__ import annotations
 
@@ -46,7 +57,18 @@ from collections import deque
 from typing import TYPE_CHECKING, Any
 
 from repro.core.engine import EngineConfig, JobSubstrate, WukongEngine
+from repro.core.faults import FaultConfig, FaultInjector
 from repro.core.kvstore import ShardedKVStore
+from repro.core.statemachine import (
+    ADMITTED,
+    COMPLETED,
+    CONTROL_NS,
+    FAILED,
+    PENDING,
+    RUNNING,
+    TERMINAL_STATES,
+    JobStateMachine,
+)
 
 if TYPE_CHECKING:  # import cycle: repro.platform imports repro.core
     from repro.platform import FaaSPlatform, PlatformConfig
@@ -63,17 +85,49 @@ class TenantSpec:
 
     ``memory_mb`` is the tenant's function size: its billing rate (GB-s)
     and its compute speed (CPU share proportional to memory), so tenants
-    on one account genuinely differ in cost/latency profile."""
+    on one account genuinely differ in cost/latency profile.
+
+    Tiering (admission + SLO accounting):
+
+    ``tier``                — label grouped over in the report's
+                              ``per_tier`` block (p50/p95/p99, SLO
+                              violations, billed USD per tier).
+    ``priority``            — admission priority; higher is admitted
+                              first. Equal priorities fall back to the
+                              PR 5 policy (fair least-loaded-tenant or
+                              plain FIFO), so single-priority workloads
+                              behave exactly as before.
+    ``max_concurrent_jobs`` — per-tenant quota: at most this many of
+                              the tenant's jobs run at once (None =
+                              bounded only by the global admission cap).
+    ``slo_s``               — job-latency objective (arrival →
+                              completion, simulated seconds); completed
+                              jobs over it count as SLO violations in
+                              ``per_tier``. None = no objective (batch).
+    """
 
     name: str
     memory_mb: int = 1792
+    tier: str = "standard"
+    priority: int = 1
+    max_concurrent_jobs: "int | None" = None
+    slo_s: "float | None" = None
+
+    def __post_init__(self) -> None:
+        if self.memory_mb <= 0:
+            raise ValueError("memory_mb must be positive")
+        if (self.max_concurrent_jobs is not None
+                and self.max_concurrent_jobs < 1):
+            raise ValueError("max_concurrent_jobs must be >= 1 or None")
+        if self.slo_s is not None and self.slo_s <= 0:
+            raise ValueError("slo_s must be positive or None")
 
 
 DEFAULT_TENANTS: "tuple[TenantSpec, ...]" = (
-    TenantSpec("tenant-a", 1792),
-    TenantSpec("tenant-b", 1792),
-    TenantSpec("tenant-c", 896),
-    TenantSpec("tenant-d", 3584),
+    TenantSpec("tenant-a", 1792, tier="standard", priority=1, slo_s=120.0),
+    TenantSpec("tenant-b", 1792, tier="standard", priority=1, slo_s=120.0),
+    TenantSpec("tenant-c", 896, tier="batch", priority=0),
+    TenantSpec("tenant-d", 3584, tier="premium", priority=2, slo_s=30.0),
 )
 
 # app name -> ladder of job sizes, small to large. The ladder index is
@@ -208,6 +262,25 @@ def generate_workload(cfg: WorkloadConfig) -> "list[JobRequest]":
     return jobs
 
 
+def _job_spec(job: JobRequest) -> "dict[str, Any]":
+    """The reconstructible job spec journaled with the PENDING
+    transition — everything a recovering orchestrator needs to rebuild
+    the ``JobRequest`` without the dead process's memory."""
+    return {
+        "job_id": job.job_id,
+        "tenant": job.tenant,
+        "app": job.app,
+        "size": job.size,
+        "arrival_ms": job.arrival_ms,
+        "compute_ms": job.compute_ms,
+        "payload_bytes": job.payload_bytes,
+    }
+
+
+def _job_from_spec(spec: "dict[str, Any]") -> JobRequest:
+    return JobRequest(**spec)
+
+
 # ---------------------------------------------------------------------------
 # The shared substrate
 # ---------------------------------------------------------------------------
@@ -233,6 +306,7 @@ class Substrate:
             counter_mode=engine.counter_mode,
         )
         self.clock = self.kv.clock
+        self._control = None
         self.platform: "FaaSPlatform | None" = None
         if platform is not None and not isolate_platform:
             self.platform = self._new_platform()
@@ -245,10 +319,22 @@ class Substrate:
             p.configure_function(t.name, t.memory_mb)
         return p
 
-    def job_substrate(self, job_name: str, tenant: str) -> JobSubstrate:
+    def control(self):
+        """The control plane's namespaced view of the shared store (the
+        job state machine's journal lives here). One cached view: the
+        journal must be the same object across dispatcher generations on
+        this substrate — that is the durability being modeled."""
+        if self._control is None:
+            self._control = self.kv.namespace(CONTROL_NS)
+        return self._control
+
+    def job_substrate(self, job_name: str, tenant: str,
+                      resume: bool = False) -> JobSubstrate:
         """The per-job view: namespaced KV, the shared platform (or a
         fresh one per job in the isolated control arm), the tenant's
-        function identity."""
+        function identity, the job's billing label — and ``resume=True``
+        when a recovering orchestrator re-admits the job (executors then
+        reuse durable task outputs instead of re-executing)."""
         if self.platform is not None:
             platform = self.platform
         elif self.platform_config is not None:
@@ -256,7 +342,8 @@ class Substrate:
         else:
             platform = None
         return JobSubstrate(kv=self.kv.namespace(job_name),
-                            platform=platform, function=tenant)
+                            platform=platform, function=tenant,
+                            job=job_name, resume=resume)
 
 
 # ---------------------------------------------------------------------------
@@ -300,6 +387,26 @@ class OrchestratorConfig:
     # Control arm: per-job private platforms (no cross-job warm sharing,
     # no shared cap) — the isolated-per-job baseline of fig15.
     isolate_platform: bool = False
+    # Orchestrator-level fault injection (``orchestrator_crash_point`` /
+    # ``orchestrator_crash_at``): kills the dispatcher at a seeded point
+    # so crash→replay recovery can be exercised. Task-level faults stay
+    # on ``engine.faults``; this config governs the control plane.
+    faults: FaultConfig = dataclasses.field(default_factory=FaultConfig)
+
+
+class OrchestratorCrashed(RuntimeError):
+    """The dispatcher died at an injected crash point. Carries what a
+    supervisor needs to restart: the still-live shared substrate (the
+    durable store survives the process) and the fault injector (its
+    occurrence counters carry across generations so the same crash does
+    not re-fire during recovery)."""
+
+    def __init__(self, point: str, substrate: "Substrate",
+                 injector: FaultInjector):
+        super().__init__(f"orchestrator crashed at point {point!r}")
+        self.point = point
+        self.substrate = substrate
+        self.injector = injector
 
 
 @dataclasses.dataclass
@@ -322,6 +429,16 @@ class OrchestratorReport:
     billed_usd_total: float
     per_tenant: "dict[str, dict[str, Any]]"
     job_records: "list[dict[str, Any]]"
+    # Tier SLO accounting: tier -> {jobs, failed, p50/p95/p99, SLO
+    # violations, billed USD} (empty when no tenant declares a tier).
+    per_tier: "dict[str, dict[str, Any]]" = dataclasses.field(
+        default_factory=dict)
+    # Durable-control-plane counters: injected dispatcher crashes
+    # survived, in-flight jobs re-admitted by replay, and tasks whose
+    # durable outputs were reused instead of re-executed.
+    crashes: int = 0
+    recovered_jobs: int = 0
+    tasks_resumed: int = 0
 
 
 def _percentile(sorted_vals: "list[float]", q: float) -> float:
@@ -347,23 +464,60 @@ class JobOrchestrator:
     def __init__(self, config: OrchestratorConfig | None = None):
         self.config = config or OrchestratorConfig()
         self.last_substrate: Substrate | None = None
+        # Orchestrator-level fault injector. ``run_with_recovery`` hands
+        # the SAME instance to each recovering generation, so a crash
+        # configured to fire once fires once across the whole lifetime.
+        self.injector = FaultInjector(self.config.faults)
         if self.config.engine.platform is not None:
             raise ValueError(
                 "set OrchestratorConfig.platform, not engine.platform: "
                 "the orchestrator owns platform construction")
 
     # -- admission policy ---------------------------------------------------
+    def _tenant(self, name: str) -> "TenantSpec | None":
+        for t in self.config.workload.tenants:
+            if t.name == name:
+                return t
+        return None
+
     def _pick_next(self, ready: "list[JobRequest]",
-                   tenant_running: "dict[str, int]") -> JobRequest:
+                   tenant_running: "dict[str, int]",
+                   ) -> "JobRequest | None":
+        """The next job to admit, or None when every ready job is
+        blocked by its tenant's quota. Order: priority tier first
+        (higher ``TenantSpec.priority`` wins), then the PR 5 policy
+        within a tier — least-loaded tenant (fair) or plain FIFO — so
+        single-priority workloads behave exactly as before."""
+        quota_ok = []
+        for j in ready:
+            spec = self._tenant(j.tenant)
+            quota = spec.max_concurrent_jobs if spec is not None else None
+            if quota is not None and tenant_running.get(j.tenant, 0) >= quota:
+                continue
+            quota_ok.append(j)
+        if not quota_ok:
+            return None
+
+        def prio(j: JobRequest) -> int:
+            spec = self._tenant(j.tenant)
+            return spec.priority if spec is not None else 1
+
         if not self.config.fair_admission:
-            return ready[0]  # plain FIFO
-        # Least-loaded tenant first; FIFO (arrival, id) within a load
-        # level — deterministic under ties.
-        return min(ready, key=lambda j: (tenant_running.get(j.tenant, 0),
-                                         j.arrival_ms, j.job_id))
+            # FIFO within a priority tier — deterministic under ties.
+            return min(quota_ok,
+                       key=lambda j: (-prio(j), j.arrival_ms, j.job_id))
+        # Least-loaded tenant first within the tier; FIFO (arrival, id)
+        # within a load level.
+        return min(quota_ok, key=lambda j: (
+            -prio(j), tenant_running.get(j.tenant, 0),
+            j.arrival_ms, j.job_id))
 
     # -- the run loop -------------------------------------------------------
     def run(self, jobs: "list[JobRequest] | None" = None) -> OrchestratorReport:
+        """Run the workload from scratch. Raises
+        :class:`OrchestratorCrashed` when a configured crash point
+        fires — use :meth:`run_with_recovery` (or catch and call
+        :meth:`recover` on a fresh instance) to survive it."""
         cfg = self.config
         if jobs is None:
             jobs = generate_workload(cfg.workload)
@@ -375,15 +529,135 @@ class JobOrchestrator:
         self.last_substrate = substrate
         return substrate.clock.run(self._run_g(jobs, substrate))
 
+    def recover(self, substrate: Substrate,
+                injector: "FaultInjector | None" = None,
+                ) -> OrchestratorReport:
+        """Recover a crashed orchestrator's workload on ITS substrate by
+        replaying the control-plane journal. Call on a FRESH instance —
+        recovery must need nothing from the dead process's memory; the
+        journal is the only input. ``injector`` carries the crashed
+        generation's occurrence counters (pass ``crash.injector``) so an
+        already-fired crash does not re-fire; omit it to recover with
+        this instance's own injector."""
+        if injector is not None:
+            self.injector = injector
+        self.last_substrate = substrate
+        return substrate.clock.run(self._recover_g(substrate))
+
+    def run_with_recovery(self, jobs: "list[JobRequest] | None" = None,
+                          max_crashes: int = 8) -> OrchestratorReport:
+        """The supervised loop: run, and on every injected dispatcher
+        crash start a FRESH orchestrator instance that replays the
+        journal and carries on — up to ``max_crashes`` restarts (a
+        crash-looping control plane should fail loudly, not spin)."""
+        crashes = 0
+        try:
+            report = self.run(jobs)
+        except OrchestratorCrashed as crash:
+            crashes += 1
+            while True:
+                orch = JobOrchestrator(self.config)
+                try:
+                    report = orch.recover(crash.substrate,
+                                          injector=crash.injector)
+                    break
+                except OrchestratorCrashed as again:
+                    crashes += 1
+                    if crashes > max_crashes:
+                        raise
+                    crash = again
+            self.last_substrate = crash.substrate
+        report.crashes = crashes
+        return report
+
     def _run_g(self, jobs: "list[JobRequest]", substrate: Substrate):
         """The dispatcher as an effect generator: the clock drives it as
         the root continuation (event substrate) or inline on the calling
         actor thread (thread/realtime substrates)."""
+        machine = JobStateMachine(substrate.control())
+        # Submission: journal PENDING (with the reconstructible job
+        # spec) for every job before any is admitted — from here on the
+        # workload survives the dispatcher.
+        clock = substrate.clock
+        for job in sorted(jobs, key=lambda j: j.job_id):
+            yield from machine.record_g(job.job_id, PENDING,
+                                        at_ms=clock.now_ms(),
+                                        payload=_job_spec(job))
+        return (yield from self._dispatch_g(
+            jobs, substrate, machine,
+            prior_records=[], resume_ids=frozenset(), recovered_jobs=0))
+
+    def _recover_g(self, substrate: Substrate):
+        """Replay-recovery as an effect generator: rebuild the state
+        machine from the journal (charged scan), split jobs into
+        journaled-terminal (returned from their journal payloads, their
+        possibly-orphaned namespaces purged) and non-terminal (re-run;
+        previously in-flight ones resume against their retained
+        namespaces), then dispatch the remainder."""
+        machine = JobStateMachine(substrate.control())
+        yield from machine.replay_g()
+
+        to_run: "list[JobRequest]" = []
+        all_jobs: "list[JobRequest]" = []
+        prior_records: "list[dict[str, Any]]" = []
+        resume_ids: "set[int]" = set()
+        recovered = 0
+        for job_id, state in sorted(machine.jobs().items()):
+            spec = machine.payload(job_id, PENDING)
+            if spec is None:
+                raise RuntimeError(
+                    f"journal names job {job_id} without a PENDING spec")
+            job = _job_from_spec(spec)
+            all_jobs.append(job)
+            if state in TERMINAL_STATES:
+                rec = machine.payload(job_id, state)
+                if rec is not None:
+                    rec = dict(rec)
+                    rec["from_journal"] = True
+                    prior_records.append(rec)
+                # The crash may have hit between journaling the terminal
+                # state and purging the job's namespace: purge now.
+                # Idempotent — dropping an already-purged namespace is a
+                # no-op.
+                substrate.kv.drop_namespace(job.name)
+            else:
+                to_run.append(job)
+                if state in (ADMITTED, RUNNING):
+                    # In flight when the dispatcher died: re-admit with
+                    # resume semantics (namespace retained — durable
+                    # task outputs are reused, not re-executed).
+                    resume_ids.add(job_id)
+                    recovered += 1
+        return (yield from self._dispatch_g(
+            all_jobs, substrate, machine,
+            prior_records=prior_records, resume_ids=frozenset(resume_ids),
+            recovered_jobs=recovered, to_run=to_run))
+
+    def _dispatch_g(self, all_jobs: "list[JobRequest]",
+                    substrate: Substrate, machine: JobStateMachine,
+                    prior_records: "list[dict[str, Any]]",
+                    resume_ids: "frozenset[int]", recovered_jobs: int,
+                    to_run: "list[JobRequest] | None" = None):
+        """The admission/dispatch/completion loop shared by fresh runs
+        and recovery. ``all_jobs`` is the full workload (reporting);
+        ``to_run`` the subset still needing execution (defaults to all).
+        Every lifecycle transition is journaled through ``machine``
+        BEFORE the action it records is performed, and the injector may
+        kill the dispatcher at the seeded crash points in between."""
         cfg = self.config
         clock = substrate.clock
+        injector = self.injector
         tenant_memory = {t.name: t.memory_mb for t in cfg.workload.tenants}
+        if to_run is None:
+            to_run = list(all_jobs)
 
-        pending = deque(sorted(jobs, key=lambda j: (j.arrival_ms, j.job_id)))
+        # Dispatch epoch: submissions were journaled (a charged control-
+        # plane write) before this loop, so the clock is already past the
+        # earliest arrivals. Queue wait is measured from when a job became
+        # ELIGIBLE for admission — max(arrival, dispatch start) — so the
+        # journaling overhead is not misattributed to gate queueing.
+        t0_ms = clock.now_ms()
+        pending = deque(sorted(to_run, key=lambda j: (j.arrival_ms, j.job_id)))
         ready: "list[JobRequest]" = []
         tenant_running: "dict[str, int]" = {}
         records: "list[dict[str, Any]]" = []
@@ -393,9 +667,16 @@ class JobOrchestrator:
 
         done_q = clock.queue()
 
-        def launch(job: JobRequest) -> None:
+        def launch_g(job: JobRequest):
             admit_ms = clock.now_ms()
-            sub = substrate.job_substrate(job.name, job.tenant)
+            yield from machine.record_g(job.job_id, ADMITTED,
+                                        at_ms=admit_ms)
+            if injector.orchestrator_crash("admit"):
+                # Mid-admission: ADMITTED is journaled but no runner
+                # exists. Recovery re-admits from the journal.
+                raise OrchestratorCrashed("admit", substrate, injector)
+            sub = substrate.job_substrate(job.name, job.tenant,
+                                          resume=job.job_id in resume_ids)
 
             def runner():
                 start_ms = clock.now_ms()
@@ -408,19 +689,37 @@ class JobOrchestrator:
                 done_q.put((job, admit_ms, start_ms, clock.now_ms(),
                             rep, error, sub))
 
+            yield from machine.record_g(job.job_id, RUNNING,
+                                        at_ms=clock.now_ms())
             clock.spawn(runner, name=job.name)
+            if injector.orchestrator_crash("dispatch"):
+                # Mid-dispatch: the runner actor is live on the
+                # substrate but the dispatcher dies. The orphan keeps
+                # running (its writes are idempotent); recovery
+                # re-admits the job and resumes over its outputs.
+                raise OrchestratorCrashed("dispatch", substrate, injector)
 
-        while len(records) < len(jobs):
+        def job_billed_usd(sub: JobSubstrate, job: JobRequest) -> float:
+            if cfg.isolate_platform and sub.platform is not None:
+                return sub.platform.snapshot()["billed_usd"]
+            if substrate.platform is not None:
+                return substrate.platform.meter.job_snapshot(
+                    job.name)["billed_usd"]
+            return 0.0
+
+        while len(records) < len(to_run):
             now = clock.now_ms()
             while pending and pending[0].arrival_ms <= now:
                 ready.append(pending.popleft())
             while ready and n_running < cfg.max_concurrent_jobs:
                 job = self._pick_next(ready, tenant_running)
+                if job is None:
+                    break  # all ready jobs quota-blocked
                 ready.remove(job)
                 tenant_running[job.tenant] = (
                     tenant_running.get(job.tenant, 0) + 1)
                 n_running += 1
-                launch(job)
+                yield from launch_g(job)
             try:
                 if pending:
                     wait_s = (pending[0].arrival_ms - clock.now_ms()) / 1e3
@@ -441,16 +740,31 @@ class JobOrchestrator:
                 "admit_ms": admit_ms,
                 "end_ms": end_ms,
                 "latency_s": (end_ms - job.arrival_ms) / 1e3,
-                "queue_wait_s": (admit_ms - job.arrival_ms) / 1e3,
+                "queue_wait_s":
+                    (admit_ms - max(job.arrival_ms, t0_ms)) / 1e3,
                 "error": error,
+                "billed_usd": job_billed_usd(sub, job),
             }
             if rep is not None:
                 rec["tasks"] = rep.tasks
                 rec["executors"] = rep.executors_invoked
+                rec["fault_stats"] = dict(rep.fault_stats)
             if cfg.isolate_platform and sub.platform is not None:
                 # Private platform: its counters ARE this job's.
                 isolated_stats.append(
                     (job.tenant, sub.platform.snapshot()))
+            # Journal the terminal state WITH the completion record
+            # before acting on it: if the dispatcher dies right after,
+            # recovery returns this job from the journal — no double
+            # execution, no double billing.
+            yield from machine.record_g(
+                job.job_id, COMPLETED if error is None else FAILED,
+                at_ms=end_ms, payload=dict(rec))
+            if injector.orchestrator_crash("complete"):
+                # Between completion and namespace purge: the journal
+                # has the result but the job's namespace is orphaned in
+                # the shared store. Recovery purges it.
+                raise OrchestratorCrashed("complete", substrate, injector)
             records.append(rec)
             # Reclaim the finished job's namespaced objects/counters
             # from the shared store: memory stays O(concurrent
@@ -461,18 +775,21 @@ class JobOrchestrator:
 
         # All jobs done; counters are stable (the substrate serializes
         # this reduction against any leftover actors).
-        return self._reduce(jobs, records, substrate, tenant_memory,
-                            isolated_stats)
+        return self._reduce(all_jobs, prior_records + records, substrate,
+                            tenant_memory, isolated_stats,
+                            recovered_jobs=recovered_jobs)
 
     # -- report reduction ---------------------------------------------------
     def _reduce(self, jobs, records, substrate, tenant_memory,
-                isolated_stats) -> OrchestratorReport:
+                isolated_stats, recovered_jobs: int = 0,
+                ) -> OrchestratorReport:
         cfg = self.config
         records = sorted(records, key=lambda r: r["job_id"])
         ok = [r for r in records if r["error"] is None]
         latencies = sorted(r["latency_s"] for r in ok)
         first_arrival = min((j.arrival_ms for j in jobs), default=0.0)
         last_end = max((r["end_ms"] for r in records), default=0.0)
+        tenant_spec = {t.name: t for t in cfg.workload.tenants}
 
         # -- platform totals + per-tenant billing ---------------------------
         cold = warm = throttled = peak = 0
@@ -502,13 +819,50 @@ class JobOrchestrator:
             t_recs = [r for r in records if r["tenant"] == tenant]
             t_ok = [r for r in t_recs if r["error"] is None]
             lat = sorted(r["latency_s"] for r in t_ok)
+            spec = tenant_spec.get(tenant)
             per_tenant[tenant] = {
                 "jobs": len(t_recs),
                 "failed": len(t_recs) - len(t_ok),
                 "memory_mb": tenant_memory.get(tenant),
+                "tier": spec.tier if spec is not None else "standard",
                 "billed_usd": tenant_billed.get(tenant, 0.0),
                 "p50_s": _percentile(lat, 50),
+                "p95_s": _percentile(lat, 95),
+                "p99_s": _percentile(lat, 99),
                 "mean_latency_s": sum(lat) / len(lat) if lat else 0.0,
+            }
+
+        # -- per-tier SLO accounting ----------------------------------------
+        def tier_of(tenant: str) -> str:
+            spec = tenant_spec.get(tenant)
+            return spec.tier if spec is not None else "standard"
+
+        per_tier: "dict[str, dict[str, Any]]" = {}
+        for tier in sorted({tier_of(j.tenant) for j in jobs}):
+            tier_tenants = {j.tenant for j in jobs
+                            if tier_of(j.tenant) == tier}
+            t_recs = [r for r in records if r["tenant"] in tier_tenants]
+            t_ok = [r for r in t_recs if r["error"] is None]
+            lat = sorted(r["latency_s"] for r in t_ok)
+            # One SLO per tier: the tightest objective any of its
+            # tenants declares (None = no objective; nothing violates).
+            slos = [tenant_spec[t].slo_s for t in tier_tenants
+                    if t in tenant_spec
+                    and tenant_spec[t].slo_s is not None]
+            slo_s = min(slos) if slos else None
+            per_tier[tier] = {
+                "jobs": len(t_recs),
+                "failed": len(t_recs) - len(t_ok),
+                "p50_s": _percentile(lat, 50),
+                "p95_s": _percentile(lat, 95),
+                "p99_s": _percentile(lat, 99),
+                "mean_latency_s": sum(lat) / len(lat) if lat else 0.0,
+                "slo_s": slo_s,
+                "slo_violations": (
+                    sum(1 for v in lat if v > slo_s)
+                    if slo_s is not None else 0),
+                "billed_usd": sum(
+                    tenant_billed.get(t, 0.0) for t in tier_tenants),
             }
 
         invocations = cold + warm
@@ -533,4 +887,9 @@ class JobOrchestrator:
             billed_usd_total=billed_total,
             per_tenant=per_tenant,
             job_records=records,
+            per_tier=per_tier,
+            recovered_jobs=recovered_jobs,
+            tasks_resumed=sum(
+                r.get("fault_stats", {}).get("tasks_resumed", 0)
+                for r in records),
         )

@@ -118,10 +118,12 @@ class FaaSPlatform:
         return self.pool.acquire(function)
 
     def wrap(self, function: str, container_id: int,
-             body: Callable[[], None]) -> Callable[[], None]:
+             body: Callable[[], None],
+             job: str | None = None) -> Callable[[], None]:
         """Wrap an executor body: meter its simulated charges as billed
         duration, then return the container to the warm pool and free
-        the concurrency slot."""
+        the concurrency slot. ``job`` is the billing-attribution label
+        recorded with the invocation."""
 
         memory_mb = self.memory_mb(function)
 
@@ -132,14 +134,15 @@ class FaaSPlatform:
                     body()
             finally:
                 self.meter.add_invocation(acc[0], memory_mb=memory_mb,
-                                          key=function)
+                                          key=function, job=job)
                 self.pool.release(function, container_id)
                 self.throttle.release()
 
         return invocation
 
     def wrap_g(self, function: str, container_id: int,
-               body: Callable[[], Any]) -> Callable[[], Any]:
+               body: Callable[[], Any],
+               job: str | None = None) -> Callable[[], Any]:
         """Effect-protocol sibling of ``wrap``: the returned zero-arg
         callable is a generator function, so it composes with bodies
         that are themselves effect generators (the event substrate's
@@ -157,7 +160,7 @@ class FaaSPlatform:
                         yield from r
             finally:
                 self.meter.add_invocation(acc[0], memory_mb=memory_mb,
-                                          key=function)
+                                          key=function, job=job)
                 self.pool.release(function, container_id)
                 self.throttle.release()
 

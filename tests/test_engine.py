@@ -144,6 +144,14 @@ class TestFaultTolerance:
             task_failure_prob=0.04, max_retries=2, seed=21))
         rep = WukongEngine(cfg).compute(dag)
         assert rep.results == seq_eval(dag)
+        # the report's fault counters audit the recovery work: this seed
+        # injects failures, every one is retried, and attempts account
+        # for every task plus every retry
+        assert rep.fault_stats["injected_failures"] > 0
+        assert rep.fault_stats["task_retries"] == \
+            rep.fault_stats["injected_failures"]
+        assert rep.fault_stats["task_attempts"] >= \
+            len(dag.tasks) + rep.fault_stats["injected_failures"]
 
     def test_exhausted_retries_fail_loudly(self):
         g = GraphBuilder()
@@ -175,6 +183,9 @@ class TestFaultTolerance:
         )
         rep = WukongEngine(cfg).compute(dag)
         assert rep.results == seq_eval(dag)
+        # speculation fired (that is what this config provokes) and each
+        # duplicate is counted — the billing-overhead audit trail
+        assert rep.fault_stats["speculative_duplicates"] > 0
 
     def test_edge_set_counters_safe_under_retries(self):
         """Retries must not double-fire fan-ins. With the paper's plain
@@ -191,6 +202,114 @@ class TestFaultTolerance:
                                seed=6))
         rep = WukongEngine(cfg).compute(dag)
         assert rep.results == seq_eval(dag)
+
+
+class TestFaultStatsReporting:
+    """JobReport.fault_stats: the per-job retry/failure audit trail."""
+
+    def test_clean_run_reports_zero_fault_activity(self):
+        dag = tree_dag(16)
+        rep = WukongEngine().compute(dag)
+        stats = rep.fault_stats
+        assert stats["task_attempts"] == len(dag.tasks)
+        for field in ("injected_failures", "task_retries",
+                      "speculative_duplicates", "throttle_retries",
+                      "tasks_resumed"):
+            assert stats[field] == 0
+
+    def test_throttle_retries_counted(self):
+        # 2-slot account + eager invokers: 429s are inevitable, and each
+        # charged backoff round trip is counted in the report.
+        from repro.platform import PlatformConfig
+        dag = tree_dag(32)
+        cfg = EngineConfig(
+            platform=PlatformConfig(account_concurrency=2,
+                                    burst_concurrency=2),
+            num_initial_invokers=8)
+        rep = WukongEngine(cfg).compute(dag)
+        assert rep.results == seq_eval(dag)
+        assert rep.fault_stats["throttle_retries"] > 0
+
+    def test_deterministic_across_runs(self):
+        dag = tree_dag(32)
+        cfg = EngineConfig(faults=FaultConfig(
+            task_failure_prob=0.04, max_retries=2, seed=21))
+        r1 = WukongEngine(cfg).compute(dag)
+        r2 = WukongEngine(cfg).compute(dag)
+        assert r1.fault_stats == r2.fault_stats
+
+
+class TestFaultConfigValidation:
+    """Satellite: every bad knob is rejected at construction, not
+    discovered as a silent mid-run misbehavior."""
+
+    @pytest.mark.parametrize("field,value", [
+        ("task_failure_prob", -0.1),
+        ("task_failure_prob", 1.1),
+        ("straggler_prob", -0.5),
+        ("straggler_prob", 2.0),
+        ("max_retries", -1),
+        ("retry_backoff_base_ms", -1.0),
+        ("straggler_slowdown_ms", -10.0),
+        ("max_backoff_ms", 0.0),
+        ("max_backoff_ms", -5.0),
+        ("speculative_threshold_ms", 0.0),
+        ("speculative_threshold_ms", -1.0),
+        ("orchestrator_crash_point", "bogus"),
+        ("orchestrator_crash_at", 0),
+    ])
+    def test_bad_field_raises(self, field, value):
+        with pytest.raises(ValueError, match=field):
+            FaultConfig(**{field: value})
+
+    def test_boundary_values_accepted(self):
+        FaultConfig(task_failure_prob=0.0)
+        FaultConfig(task_failure_prob=1.0)
+        FaultConfig(straggler_prob=1.0, max_retries=0,
+                    retry_backoff_base_ms=0.0, straggler_slowdown_ms=0.0)
+        FaultConfig(speculative_threshold_ms=float("inf"))
+        FaultConfig(orchestrator_crash_point=None)
+        FaultConfig(orchestrator_crash_point="dispatch",
+                    orchestrator_crash_at=1)
+
+
+class TestRetryBackoffCap:
+    """Satellite: exponential retry backoff saturates at max_backoff_ms
+    instead of letting 2**k dominate the simulated makespan."""
+
+    def test_exponential_growth_then_cap(self):
+        from repro.core.faults import exponential_backoff_ms
+        assert exponential_backoff_ms(100.0, 0, cap_ms=1e4) == 100.0
+        assert exponential_backoff_ms(100.0, 3, cap_ms=1e4) == 800.0
+        assert exponential_backoff_ms(100.0, 20, cap_ms=1e4) == 1e4
+        assert exponential_backoff_ms(0.0, 50, cap_ms=1e4) == 0.0
+
+    def test_injector_applies_configured_cap(self):
+        from repro.core.faults import FaultInjector
+        inj = FaultInjector(FaultConfig(retry_backoff_base_ms=1000.0,
+                                        max_backoff_ms=4000.0))
+        assert [inj.retry_backoff_ms(k) for k in range(5)] == \
+            [1000.0, 2000.0, 4000.0, 4000.0, 4000.0]
+
+    def test_cap_bounds_charged_retry_delay(self):
+        # seed=21 on tree_dag(32) is the verified recoverable injection
+        # (see test_retries_recover). Same faults, huge backoff base:
+        # a tight cap must make the charged makespan strictly smaller
+        # than a loose one, by at least the backoff delta it shaves.
+        dag = tree_dag(32)
+
+        def run(cap_ms):
+            cfg = EngineConfig(faults=FaultConfig(
+                task_failure_prob=0.04, max_retries=2, seed=21,
+                retry_backoff_base_ms=5e4, max_backoff_ms=cap_ms))
+            rep = WukongEngine(cfg).compute(dag)
+            assert rep.results == seq_eval(dag)
+            return rep
+
+        tight, loose = run(10.0), run(1e6)
+        assert tight.fault_stats["task_retries"] == \
+            loose.fault_stats["task_retries"] > 0
+        assert tight.charged_ms < loose.charged_ms
 
 
 class TestCostAccounting:
