@@ -102,6 +102,30 @@ def wukong_dataplane_off(scale: float = SIM_SCALE, **kw: Any) -> WukongEngine:
                                      batch_kv_round_trips=False, **kw))
 
 
+def wukong_locality(scale: float = SIM_SCALE, cache: "Any | None" = None,
+                    optimize: OptimizeConfig = ALL_PASSES,
+                    invokers: int = 8, substrate: "str | None" = None,
+                    **kw: Any) -> WukongEngine:
+    """WUKONG on the stateful platform in the emulated data-intensive
+    regime, with an optional container cache (``CacheConfig``) — the
+    fig18 locality series. Same KV regime as ``wukong_dataplane``, so
+    the cacheless arm is the PR 2 data plane and the cached arms isolate
+    exactly the multi-tier cache + locality-aware placement. When
+    ``substrate`` is None the CostModel default applies (the event
+    engine, or ``REPRO_SIM_SUBSTRATE`` — how the CI matrix steers the
+    fig18 job)."""
+    from repro.platform import PlatformConfig
+
+    c = cost(scale, kv_bandwidth_mbps=DATAPLANE_KV_MBPS,
+             stripe_threshold_bytes=DATAPLANE_STRIPE_BYTES,
+             cold_start_ms=250.0,
+             **({} if substrate is None else {"substrate": substrate}))
+    return WukongEngine(EngineConfig(
+        cost=c, optimize=optimize, batch_kv_round_trips=True,
+        num_initial_invokers=invokers, num_proxy_invokers=invokers,
+        platform=PlatformConfig(keep_alive_s=600.0, cache=cache), **kw))
+
+
 # -- stateful platform presets (fig14: warm pool / throttling / billing) ----
 
 

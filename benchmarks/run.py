@@ -32,7 +32,7 @@ RESULTS_JSON = os.path.join(
 
 def _json_row(row: dict) -> dict:
     """The per-PR trajectory record for one engine/config series."""
-    return {
+    out = {
         "wall_s": row["wall_s"],
         "charged_ms": row.get("charged_ms"),
         "kv_stats": row.get("kv_stats"),
@@ -42,6 +42,14 @@ def _json_row(row: dict) -> dict:
         # USD in pool mode; invoker cold starts in every mode).
         "platform_stats": row.get("platform_stats"),
     }
+    if row.get("cache_stats"):
+        # Locality trajectory (fig18): per-tier hits/misses/evictions,
+        # tier-0 hit rate, and bytes served locally instead of from the
+        # shared KV store.
+        out["cache_stats"] = row["cache_stats"]
+        out["hit_rate"] = row.get("hit_rate")
+        out["bytes_local"] = row.get("bytes_local")
+    return out
 
 
 def _time_schedule_generation() -> dict:
@@ -293,6 +301,7 @@ def main() -> None:
         fig15_multitenant,
         fig16_scaling,
         fig17_recovery,
+        fig18_locality,
     )
     from benchmarks import common
 
@@ -363,6 +372,15 @@ def main() -> None:
                        substrates=("event", "thread"),
                        max_concurrent_jobs=8),
                   dict(n_jobs=64, crash_ats=(1, 4, 16))),
+        # Locality series (multi-tier container cache vs cacheless) on
+        # the two data-intensive shapes. Smoke = the CI locality gate
+        # (cache strictly cheaper, tier-0 hits > 0, bit-identical
+        # across runs and substrates); full adds a capacity sweep.
+        "fig18": (fig18_locality.run,
+                  dict(gemm_sizes=((512, 128),), tree_n=256),
+                  dict(gemm_sizes=((512, 128),), tree_n=512),
+                  dict(gemm_sizes=((512, 128), (1024, 128)), tree_n=1024,
+                       capacities=(1 << 20, 4 << 20, 16 << 20))),
     }
     mode = 0 if args.smoke else (1 if args.quick else 2)
     only = set(args.only.split(",")) if args.only else None
@@ -411,6 +429,9 @@ def main() -> None:
             fig16_scaling.check_gates(rows_by_fig["fig16"])
         if "fig17" in rows_by_fig:
             fig17_recovery.check_gates(rows_by_fig["fig17"])
+        if "fig18" in rows_by_fig:
+            fig18_locality.check_gates(rows_by_fig["fig18"],
+                                       **figs["fig18"][1])
 
 
 if __name__ == "__main__":

@@ -1,5 +1,11 @@
 """WUKONG core: decentralized serverless DAG engine (the paper's contribution)."""
 from repro.core.api import GraphBuilder, delayed_graph
+from repro.core.cache import (
+    CacheConfig,
+    CacheRegistry,
+    CacheStats,
+    ExecutorCache,
+)
 from repro.core.dag import DAG, Task, TaskRef
 from repro.core.engine import (
     ENGINES,
@@ -84,6 +90,7 @@ __all__ = [
     "StrawmanEngine", "PubSubEngine", "ParallelInvokerEngine",
     "ServerfulEngine",
     "FaultConfig", "FaultInjector", "FaultStats", "SimulatedTaskFailure",
+    "CacheConfig", "CacheStats", "ExecutorCache", "CacheRegistry",
     "CostModel", "ShardedKVStore", "KVNamespace",
     "JobOrchestrator", "JobRequest", "OrchestratorConfig",
     "OrchestratorCrashed", "OrchestratorReport", "Substrate", "TenantSpec",

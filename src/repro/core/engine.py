@@ -178,6 +178,10 @@ class JobReport:
     # pools' 429-retry tally): task attempts, injected failures, retries,
     # speculative duplicates, throttle retries, resumed tasks.
     fault_stats: dict[str, int] = dataclasses.field(default_factory=dict)
+    # Locality observability (repro.core.cache): THIS job's per-tier
+    # hits/misses/evictions/spills and bytes served locally vs remotely.
+    # Empty unless the platform runs with a container cache configured.
+    cache_stats: dict[str, int] = dataclasses.field(default_factory=dict)
 
 
 def _platform_stats(platform: "FaaSPlatform | None",
@@ -201,6 +205,19 @@ def _platform_stats(platform: "FaaSPlatform | None",
                  "cold_starts": sum(p.cold_starts for p in pools)}
     stats["invocations"] = sum(p.invocations for p in pools)
     return stats
+
+
+def _cache_stats_block(ctx: ExecutorContext,
+                       kv_stats: "dict[str, int]") -> "dict[str, int]":
+    """The JobReport locality block: this job's cache-tier counters plus
+    bytes served remotely (the KV bytes it actually read — everything a
+    cache hit did NOT turn into local service). Empty when no container
+    cache ran, so cacheless reports are unchanged."""
+    snap = ctx.cache_stats.snapshot()
+    if not any(snap.values()):
+        return {}
+    snap["bytes_remote"] = kv_stats.get("bytes_read", 0)
+    return snap
 
 
 class _ResultWaiter:
@@ -323,6 +340,12 @@ class WukongEngine:
             platform = substrate.platform
         else:
             platform = _make_platform(cfg.platform, cfg.cost, clock)
+            caches = getattr(platform, "caches", None)
+            if caches is not None and hasattr(kv, "add_purge_listener"):
+                # Namespace reclamation must reach container caches too
+                # (idempotent registration). On a shared substrate the
+                # orchestrator registers its shared platform instead.
+                kv.add_purge_listener(caches.invalidate_prefix)
         job = substrate.job if substrate is not None else None
         initial_invokers = InvokerPool(
             cfg.num_initial_invokers, cfg.cost, clock, pool, name="init",
@@ -342,7 +365,7 @@ class WukongEngine:
         ctx: ExecutorContext | None = None
 
         def spawn(start_key, seed_cache, schedule, width, attempt=0,
-                  parent=None):
+                  parent=None, hint_keys=()):
             # Effect generator: spawn charges nothing itself, but the
             # proxy path publishes (a charged KV operation).
             assert ctx is not None
@@ -352,7 +375,7 @@ class WukongEngine:
                 cfg.cost.schedule_ship_mbps * 1e6
             ) * 1e3
             body = _executor_body(ctx, schedule, start_key, seed_cache,
-                                  attempt, parent)
+                                  attempt, parent, hint_keys=hint_keys)
             if proxy is not None and width >= cfg.proxy_threshold:
                 # Large fan-out: one pub/sub message offloads all the
                 # invocations to the proxy's parallel invoker pool.
@@ -419,13 +442,14 @@ class WukongEngine:
         # the substrate serializes this read against any still-draining
         # leftover work (late retries/speculative duplicates), so the
         # report is deterministic.
+        kv_snapshot = kv.stats.snapshot()
         report = JobReport(
             results=results,
             wall_s=wall,
             tasks=len(dag),
             executors_invoked=initial_invokers.invocations
             + proxy_invokers.invocations,
-            kv_stats=kv.stats.snapshot(),
+            kv_stats=kv_snapshot,
             metrics=list(metrics.records),
             charged_ms=clock.charged_ms - charged0,
             optimizer=getattr(dag, "pass_stats", ()),
@@ -433,6 +457,7 @@ class WukongEngine:
                 platform, [initial_invokers, proxy_invokers]),
             fault_stats=_merge_fault_stats(
                 fault_stats, [initial_invokers, proxy_invokers]),
+            cache_stats=_cache_stats_block(ctx, kv_snapshot),
         )
         return report
 
@@ -447,11 +472,20 @@ def _merge_fault_stats(fault_stats: FaultStats,
     return stats
 
 
-def _executor_body(ctx, schedule, start_key, seed_cache, attempt, parent=None):
-    def body():
+def _executor_body(ctx, schedule, start_key, seed_cache, attempt, parent=None,
+                   hint_keys=()):
+    def body(container_cache=None):
         return TaskExecutor(ctx, schedule, start_key, seed_cache, attempt,
-                            parent=parent).run_g()
+                            parent=parent,
+                            container_cache=container_cache).run_g()
 
+    # Platform handshake: ``accepts_cache`` tells wrap_g to pass the
+    # container's multi-tier cache in; ``hint_keys`` (store-qualified
+    # input keys) lets the invoker bias placement toward a warm
+    # container already holding them. Attributes — not parameters — so
+    # the invoker/proxy submit path stays body-shape-agnostic.
+    body.accepts_cache = True
+    body.hint_keys = tuple(hint_keys)
     return body
 
 

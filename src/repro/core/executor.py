@@ -38,6 +38,7 @@ from __future__ import annotations
 import threading
 from typing import Any, Callable
 
+from repro.core.cache import CacheStats, ExecutorCache
 from repro.core.dag import DAG, TaskRef
 from repro.core.faults import (
     ExecutorHeartbeat,
@@ -134,6 +135,14 @@ class ExecutorContext:
         self.resume = resume
         # Shared per-job fault/retry observability counters (JobReport).
         self.fault_stats = fault_stats or FaultStats()
+        # Per-job cache-tier counters (JobReport.cache_stats): container
+        # caches count account-wide on their own; executors pass this
+        # sink so the job's report never includes another tenant's hits.
+        self.cache_stats = CacheStats()
+        # Container caches are shared across jobs of a function, so they
+        # key on STORE-QUALIFIED names (namespace prefix included).
+        self.cache_prefix = (
+            kv.qualified_key("") if hasattr(kv, "qualified_key") else "")
         self._id_lock = threading.Lock()
         self._next_id = 0
 
@@ -155,6 +164,7 @@ class TaskExecutor:
         seed_cache: dict[str, Any] | None = None,
         attempt: int = 0,
         parent: str | None = None,
+        container_cache: "ExecutorCache | None" = None,
     ):
         self.ctx = ctx
         self.schedule = schedule
@@ -174,6 +184,12 @@ class TaskExecutor:
         self.parent = parent
         self.executor_id = ctx.next_executor_id()
         self.cache: dict[str, Any] = {}
+        # The CONTAINER's multi-tier cache (repro.core.cache), handed in
+        # by the platform wrapper: outlives this invocation on warm
+        # reuse, so it serves objects across executors — unlike
+        # ``self.cache``, which is this walk's private (free, unbounded)
+        # working set. None without a platform cache configured.
+        self.ccache = container_cache
         self.tasks_executed = 0
         self._failed_at = 0  # index of the start key whose walk failed
 
@@ -192,13 +208,37 @@ class TaskExecutor:
                 yield from self.ctx.kv.put_if_absent_g(dep, self.cache[dep])
         return clock.now_ms() - t0
 
+    def _qkey(self, key: str) -> str:
+        return self.ctx.cache_prefix + key
+
+    def _probe_tiers_g(self, key: str):
+        """Probe the container cache (memory, then disk) for ``key``.
+        Returns ``(hit, value)``; a miss means tier 2 — the shared KV
+        store — which the caller was about to pay anyway."""
+        if self.ccache is None:
+            return False, None
+        return (yield from self.ccache.probe_g(
+            self._qkey(key), stats=self.ctx.cache_stats))
+
+    def _readthrough_g(self, key: str, value: Any):
+        """Deposit a remotely-fetched input into the container cache."""
+        if self.ccache is not None:
+            yield from self.ccache.deposit_g(
+                self._qkey(key), value, sizeof(value),
+                stats=self.ctx.cache_stats)
+
     def _resolve_g(self, a: Any, fetched: dict[str, Any]):
         if isinstance(a, TaskRef):
             if a.key in self.cache:
                 return self.cache[a.key]  # data locality: no network
             if a.key in fetched:
                 return fetched[a.key]
-            return (yield from self.ctx.kv.get_g(a.key))
+            hit, val = yield from self._probe_tiers_g(a.key)
+            if hit:
+                return val
+            val = yield from self.ctx.kv.get_g(a.key)
+            yield from self._readthrough_g(a.key, val)
+            return val
         return a
 
     def _gather_inputs_g(self, key: str):
@@ -216,11 +256,27 @@ class TaskExecutor:
             for a in list(task.args) + list(task.kwargs.values()):
                 if (isinstance(a, TaskRef) and a.key not in self.cache
                         and a.key not in fetched):
+                    # Tier probe before the remote mget: an input a
+                    # previous invocation of this container produced (or
+                    # spilled) is served locally and drops out of the
+                    # remote batch entirely.
+                    hit, val = yield from self._probe_tiers_g(a.key)
+                    if hit:
+                        fetched[a.key] = val
+                        continue
                     fetched[a.key] = None
                     need.append(a.key)
             if need:
                 values = yield from self.ctx.kv.mget_g(need)
-                fetched = dict(zip(need, values))
+                fetched.update(zip(need, values))
+                for k in need:
+                    # Read-through: a remote fetch leaves a tier-0 copy
+                    # behind, so the NEXT invocation this container hosts
+                    # (a hint-steered sibling sharing the input, a
+                    # retry) reads it locally. This is where shared
+                    # inputs — e.g. a GEMM block feeding b multiplies —
+                    # stop costing one KV transfer per consumer.
+                    yield from self._readthrough_g(k, fetched[k])
 
         args = []
         for a in task.args:
@@ -265,6 +321,14 @@ class TaskExecutor:
                 # budget yet, so they respawn at attempt 0. This keeps a
                 # coalesced batch's fault tolerance identical per-task to
                 # uncoalesced execution.
+                hints = ()
+                if self.ccache is not None:
+                    # Bias the retry toward a container holding the
+                    # failed walk's inputs: the retry then refetches
+                    # them from its cache tiers instead of the KV store.
+                    hints = tuple(dict.fromkeys(
+                        self._qkey(d)
+                        for d in self.ctx.dag.deps[self.start_keys[failed]]))
                 yield from self.ctx.spawn(
                     self.start_keys[failed],
                     dict(self.seed_cache),
@@ -272,6 +336,7 @@ class TaskExecutor:
                     width=1,
                     attempt=self.attempt + 1,
                     parent=self.parent,
+                    hint_keys=hints,
                 )
                 rest = self.start_keys[failed + 1:]
                 if rest:
@@ -435,6 +500,17 @@ class TaskExecutor:
             # One sizeof walk per output, reused by metrics and as the
             # KV write's size hint (the store records it per key).
             out_nbytes = sizeof(out)
+            if self.ccache is not None:
+                # Tier-0 deposit: the output stays container-resident
+                # across warm reuses, so later invocations landing here
+                # (fan-in completers, retries, other jobs' readers are
+                # excluded by key qualification) skip the KV read. The
+                # write-through below is unchanged — the static schedule
+                # has non-local consumers (invoked children / the result
+                # waiter) whenever it happens at all.
+                yield from self.ccache.deposit_g(
+                    self._qkey(current), out, out_nbytes,
+                    stats=self.ctx.cache_stats)
 
             children = dag.children[current]
             # ---- sink: final result --------------------------------------
@@ -467,7 +543,21 @@ class TaskExecutor:
                 prev, current = current, children[0]  # trivial fan-out
                 continue
 
-            become, *invoked = children
+            # Locality-aware become-choice: walk the child whose inputs
+            # are most container-resident (by bytes); its siblings are
+            # invoked elsewhere. An empty/absent cache scores every
+            # child 0 and the tiebreak keeps the schedule order, so the
+            # cacheless walk is unchanged bit for bit.
+            if self.ccache is not None and len(children) > 1:
+                idx = max(
+                    range(len(children)),
+                    key=lambda i: (self.ccache.resident_bytes(
+                        self._qkey(d) for d in dag.deps[children[i]]), -i),
+                )
+                become = children[idx]
+                invoked = children[:idx] + children[idx + 1:]
+            else:
+                become, *invoked = children
             write_ms = 0.0
             if not self.ctx.inline_fanout_args:
                 # Intermediate outputs needed by the new executors go to the
@@ -490,8 +580,17 @@ class TaskExecutor:
             else:
                 groups = [(child,) for child in invoked]
             for group in groups:
+                # Placement hint: the group's input keys (store-
+                # qualified); the invoker biases this invocation toward
+                # a warm container whose cache already holds them.
+                hints = ()
+                if self.ccache is not None:
+                    hints = tuple(dict.fromkeys(
+                        self._qkey(d)
+                        for k in group for d in dag.deps[k]))
                 yield from self.ctx.spawn(group, dict(seed), self.schedule,
-                                          width=len(groups), parent=current)
+                                          width=len(groups), parent=current,
+                                          hint_keys=hints)
             self.ctx.metrics.record(
                 task=current, event="fanout", width=len(children),
                 write_ms=write_ms, executor=self.executor_id,

@@ -127,7 +127,13 @@ class InvokerPool:
         # in flight is warm for it; the cold-start provisioning delay is
         # then paid only when the pool misses.
         yield ("charge", self.cost.invoke_jitter_ms(index) + extra_ms)
-        cid, cold = platform.acquire(self.function)
+        # Locality-aware placement: executor bodies carry the
+        # store-qualified keys they will read (hint_keys); the platform
+        # biases container choice toward a warm container already
+        # holding those bytes in its cache. Host-side knowledge only —
+        # no charge, and a miss just falls back to LIFO reuse.
+        cid, cold = platform.acquire(
+            self.function, prefer_keys=getattr(body, "hint_keys", ()))
         if cold:
             with self._lock:
                 self.cold_starts += 1

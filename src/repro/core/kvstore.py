@@ -335,6 +335,11 @@ class ShardedKVStore:
         # measure *data-plane* state).
         self._journals: dict[str, list[tuple[Any, int]]] = {}
         self._journal_lock = threading.Lock()
+        # Called with the dropped prefix after ``drop_namespace`` sweeps
+        # the store, so caches holding store-qualified keys (the
+        # platform's container caches, repro.core.cache) reclaim a
+        # finished job's entries in the same breath as its KV objects.
+        self._purge_listeners: list[Any] = []
         self.stats = KVStats()
         self._stats_lock = threading.Lock()
 
@@ -896,7 +901,20 @@ class ShardedKVStore:
         with self._stats_lock:
             self.stats = KVStats()
 
+    def qualified_key(self, key: str) -> str:
+        """The store-global form of ``key`` as seen through this view —
+        the identity here; ``KVNamespace`` prefixes. Container caches
+        key on this, so bare keys of different jobs never collide."""
+        return key
+
     # -- multi-tenancy ------------------------------------------------------
+    def add_purge_listener(self, fn: Any) -> None:
+        """Register ``fn(prefix)`` to run after ``drop_namespace``
+        removes a namespace's objects (idempotent: re-registering the
+        same callable is a no-op)."""
+        if fn not in self._purge_listeners:
+            self._purge_listeners.append(fn)
+
     def namespace(self, name: str) -> "KVNamespace":
         """A per-job view of this store: keys, counter ids, and pub/sub
         channels are prefixed with ``name`` and the view keeps its own
@@ -940,6 +958,12 @@ class ShardedKVStore:
         with self._journal_lock:
             for j in [j for j in self._journals if j.startswith(prefix)]:
                 del self._journals[j]
+        # Same reclamation, one layer out: container-resident cache
+        # entries of the dropped job (keyed store-qualified) must go
+        # too, or a recycled warm container could serve a stale object
+        # to a later job reusing the bare key.
+        for fn in tuple(self._purge_listeners):
+            fn(prefix)
         return removed
 
 
@@ -968,6 +992,11 @@ class KVNamespace:
 
     def _k(self, key: str) -> str:
         return self._prefix + key
+
+    def qualified_key(self, key: str) -> str:
+        """Store-global key form (see ``ShardedKVStore.qualified_key``);
+        container caches use it so jobs never collide on bare keys."""
+        return self._k(key)
 
     def _bump(self, **fields: int) -> None:
         with self._stats_lock:

@@ -310,6 +310,15 @@ class Substrate:
         self.platform: "FaaSPlatform | None" = None
         if platform is not None and not isolate_platform:
             self.platform = self._new_platform()
+            if self.platform.caches is not None:
+                # Cache coherence on the shared account: purging a
+                # finished job's namespace must also reclaim its objects
+                # from every container-resident cache, or a recycled
+                # warm container could serve a later job's colliding key
+                # from a dead job's bytes. Isolated per-job platforms
+                # skip this — their caches die with the job.
+                self.kv.add_purge_listener(
+                    self.platform.caches.invalidate_prefix)
 
     def _new_platform(self) -> "FaaSPlatform":
         from repro.platform import FaaSPlatform
@@ -439,6 +448,10 @@ class OrchestratorReport:
     crashes: int = 0
     recovered_jobs: int = 0
     tasks_resumed: int = 0
+    # Account-wide locality counters (per-tier cache hits/misses/
+    # evictions + residency) when the platform runs with container
+    # caches; empty otherwise.
+    cache: "dict[str, Any]" = dataclasses.field(default_factory=dict)
 
 
 def _percentile(sorted_vals: "list[float]", q: float) -> float:
@@ -749,6 +762,8 @@ class JobOrchestrator:
                 rec["tasks"] = rep.tasks
                 rec["executors"] = rep.executors_invoked
                 rec["fault_stats"] = dict(rep.fault_stats)
+                if rep.cache_stats:
+                    rec["cache_stats"] = dict(rep.cache_stats)
             if cfg.isolate_platform and sub.platform is not None:
                 # Private platform: its counters ARE this job's.
                 isolated_stats.append(
@@ -795,12 +810,23 @@ class JobOrchestrator:
         cold = warm = throttled = peak = 0
         billed_total = 0.0
         tenant_billed: "dict[str, float]" = {}
+        cache_total: "dict[str, Any]" = {}
+
+        def fold_cache(block: "dict[str, Any] | None") -> None:
+            # Sum counters across platforms; peak-style residency fields
+            # also sum (concurrent private pools hold bytes at once).
+            if not block:
+                return
+            for k, v in block.items():
+                cache_total[k] = cache_total.get(k, 0) + v
+
         if substrate.platform is not None:          # shared account
             snap = substrate.platform.snapshot()
             cold, warm = snap["cold_starts"], snap["warm_reuses"]
             throttled = snap["throttle_events"]
             peak = snap["peak_concurrency"]
             billed_total = snap["billed_usd"]
+            fold_cache(snap.get("cache"))
             for tenant, block in snap.get("billing_by_function",
                                           {}).items():
                 tenant_billed[tenant] = block["billed_usd"]
@@ -811,6 +837,7 @@ class JobOrchestrator:
                 throttled += snap["throttle_events"]
                 peak = max(peak, snap["peak_concurrency"])
                 billed_total += snap["billed_usd"]
+                fold_cache(snap.get("cache"))
                 tenant_billed[tenant] = (
                     tenant_billed.get(tenant, 0.0) + snap["billed_usd"])
 
@@ -892,4 +919,5 @@ class JobOrchestrator:
             tasks_resumed=sum(
                 r.get("fault_stats", {}).get("tasks_resumed", 0)
                 for r in records),
+            cache=cache_total,
         )

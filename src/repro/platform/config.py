@@ -21,6 +21,8 @@ from __future__ import annotations
 
 import dataclasses
 
+from repro.core.cache import CacheConfig
+
 
 @dataclasses.dataclass(frozen=True)
 class PlatformConfig:
@@ -36,6 +38,11 @@ class PlatformConfig:
     keep_alive_s: float = 600.0       # idle container lifetime (simulated s)
     prewarm: int = 0                  # containers warmed before the job
     #                                   (paper §V-A warms a Lambda pool)
+    # Executor-local multi-tier cache (repro.core.cache): each container
+    # keeps task outputs in modeled memory with disk spill, retained
+    # across warm reuses and dropped on keep-alive expiry. None = the
+    # cacheless data plane (every cross-executor edge pays the KV store).
+    cache: CacheConfig | None = None
 
     # -- account concurrency + burst ramp -----------------------------------
     account_concurrency: int = 1000   # hard account-wide cap

@@ -31,6 +31,7 @@ from __future__ import annotations
 from types import GeneratorType
 from typing import Any, Callable
 
+from repro.core.cache import CacheRegistry
 from repro.core.kvstore import CostModel
 from repro.core.simclock import BaseClock, charge_meter
 
@@ -73,6 +74,14 @@ class FaaSPlatform:
         self.pool = ContainerPool(config, clock)
         self.throttle = ConcurrencyThrottle(config, clock)
         self.meter = BillingMeter(config)
+        # Container-resident multi-tier caches (repro.core.cache): the
+        # pool decides container identity, the registry makes each
+        # container's cache follow it — retained across warm reuses,
+        # dropped on expiry (the pool's on_expire hook).
+        self.caches: "CacheRegistry | None" = (
+            CacheRegistry(config.cache) if config.cache is not None else None)
+        if self.caches is not None:
+            self.pool.on_expire = self.caches.drop
         # Per-function memory overrides (multi-tenant: one function per
         # tenant, each with its own memory size -> its own billing rate
         # and compute speed). Unregistered functions use the account
@@ -114,7 +123,19 @@ class FaaSPlatform:
     def backoff_ms(self, attempt: int) -> float:
         return self.throttle.backoff_ms(attempt)
 
-    def acquire(self, function: str = DEFAULT_FUNCTION) -> "tuple[int, bool]":
+    def acquire(self, function: str = DEFAULT_FUNCTION,
+                prefer_keys: "tuple[str, ...]" = ()) -> "tuple[int, bool]":
+        """Assign a container. ``prefer_keys`` is the locality hint from
+        the invoker: store-qualified keys the invocation will read —
+        the pool then prefers the idle container already holding the
+        most bytes of them (ties keep LIFO reuse)."""
+        if self.caches is not None and prefer_keys:
+            caches = self.caches
+
+            def score(cid: int) -> int:
+                return caches.resident_bytes(function, cid, prefer_keys)
+
+            return self.pool.acquire(function, score=score)
         return self.pool.acquire(function)
 
     def wrap(self, function: str, container_id: int,
@@ -126,12 +147,19 @@ class FaaSPlatform:
         recorded with the invocation."""
 
         memory_mb = self.memory_mb(function)
+        cache = (self.caches.cache_for(function, container_id)
+                 if self.caches is not None else None)
 
         def invocation() -> None:
             acc = [0.0]
             try:
                 with charge_meter(acc):
-                    body()
+                    # Cache-aware bodies (the executor bodies) take the
+                    # container's cache; plain bodies run unchanged.
+                    if getattr(body, "accepts_cache", False):
+                        body(cache)
+                    else:
+                        body()
             finally:
                 self.meter.add_invocation(acc[0], memory_mb=memory_mb,
                                           key=function, job=job)
@@ -150,12 +178,17 @@ class FaaSPlatform:
         to ``wrap``."""
 
         memory_mb = self.memory_mb(function)
+        cache = (self.caches.cache_for(function, container_id)
+                 if self.caches is not None else None)
 
         def invocation():
             acc = [0.0]
             try:
                 with charge_meter(acc):
-                    r = body()
+                    if getattr(body, "accepts_cache", False):
+                        r = body(cache)
+                    else:
+                        r = body()
                     if isinstance(r, GeneratorType):
                         yield from r
             finally:
@@ -199,6 +232,10 @@ class FaaSPlatform:
             "peak_concurrency": self.throttle.peak_concurrency,
         }
         out.update(self.meter.snapshot())
+        if self.caches is not None:
+            # Account-wide locality counters (per-tier hits/misses/
+            # evictions + residency), fresh dict per the contract above.
+            out["cache"] = self.caches.snapshot()
         if self._fn_memory:
             # Multi-tenant deployments: the account bill broken down by
             # tenant function (fresh nested dicts, same aliasing contract).

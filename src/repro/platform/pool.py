@@ -14,6 +14,7 @@ container alive while the rest of the fleet ages out.
 from __future__ import annotations
 
 import threading
+from typing import Callable
 
 from repro.core.simclock import BaseClock
 
@@ -35,6 +36,11 @@ class ContainerPool:
         self.cold_starts = 0
         self.warm_reuses = 0
         self.expired = 0
+        # Notified with (function, container_id) when a container is
+        # reclaimed (keep-alive expiry, or zero keep-alive). The
+        # platform points this at its cache registry so a container's
+        # cache dies with the container.
+        self.on_expire: "Callable[[str, int], None] | None" = None
 
     def prewarm(self, function: str, n: int) -> None:
         """Provision ``n`` warm containers at the current clock time
@@ -49,19 +55,35 @@ class ContainerPool:
                 self._next_id += 1
                 stack.append((expiry, self._next_id))
 
-    def acquire(self, function: str) -> "tuple[int, bool]":
+    def acquire(self, function: str,
+                score: "Callable[[int], int] | None" = None,
+                ) -> "tuple[int, bool]":
         """Assign a container for one invocation of ``function``.
-        Returns ``(container_id, was_cold)``."""
+        Returns ``(container_id, was_cold)``.
+
+        ``score`` is the locality hint: a host-side callable rating each
+        idle container (e.g. bytes of the invocation's inputs resident
+        in its cache). The highest-scoring live container is taken;
+        ties keep the LIFO choice, so a zero-information score degrades
+        exactly to the default reuse order."""
         now = self.clock.now_ms()
         with self._lock:
             stack = self._idle.get(function)
             if stack:
                 # Reap from the bottom: oldest releases expire first.
                 while stack and stack[0][0] <= now:
-                    stack.pop(0)
+                    _, dead = stack.pop(0)
                     self.expired += 1
+                    if self.on_expire is not None:
+                        self.on_expire(function, dead)
             if stack:
-                _, cid = stack.pop()
+                idx = len(stack) - 1
+                if score is not None and len(stack) > 1:
+                    # max() keeps the first maximum; the index tiebreak
+                    # makes that the most recently released container.
+                    idx = max(range(len(stack)),
+                              key=lambda i: (score(stack[i][1]), i))
+                _, cid = stack.pop(idx)
                 self.warm_reuses += 1
                 return cid, False
             self._next_id += 1
@@ -72,7 +94,11 @@ class ContainerPool:
         """Return a container to the idle pool; it stays warm for
         ``keep_alive_s`` simulated seconds."""
         if self.config.keep_alive_s <= 0:
-            return  # immediately reclaimed: every invocation is cold
+            # Immediately reclaimed: every invocation is cold, and any
+            # container-resident state (cache) is reclaimed with it.
+            if self.on_expire is not None:
+                self.on_expire(function, container_id)
+            return
         expiry = self.clock.now_ms() + self.config.keep_alive_s * 1e3
         with self._lock:
             self._idle.setdefault(function, []).append((expiry, container_id))

@@ -20,6 +20,7 @@ import pytest
 from repro.apps import tree_reduction_dag
 from repro.apps.tree_reduction import tree_reduction_expected
 from repro.core import (
+    CacheConfig,
     CostModel,
     EngineConfig,
     FaultConfig,
@@ -744,3 +745,84 @@ class TestTenantTiers:
                                  max_concurrent_jobs=4)
         rep = JobOrchestrator(cfg).run()
         assert rep.per_tier["rt"]["slo_violations"] == rep.completed > 0
+
+
+# ---------------------------------------------------------------------------
+# Container-cache coherence (locality PR): purge reaches caches, and a
+# recycled warm container never serves a stale bare key across jobs
+# ---------------------------------------------------------------------------
+
+
+def _deposit(cache, key, value="v", nbytes=8):
+    for _ in cache.deposit_g(key, value, nbytes):
+        pass
+
+
+class TestContainerCacheCoherence:
+    def test_drop_namespace_invalidates_container_cached_entries(self):
+        cfg = _engine_cfg()
+        substrate = Substrate(
+            cfg, PlatformConfig(keep_alive_s=600.0, cache=CacheConfig()),
+            tenants=(TenantSpec("t", 1792),))
+        cache = substrate.platform.caches.cache_for("t", 1)
+        k_dead = substrate.kv.namespace("job0").qualified_key("x")
+        k_live = substrate.kv.namespace("job1").qualified_key("x")
+        _deposit(cache, k_dead)
+        _deposit(cache, k_live)
+        # the shared-substrate purge listener reclaims job0's entry from
+        # the container cache along with its KV objects
+        substrate.kv.drop_namespace("job0")
+        assert not cache.contains(k_dead)
+        assert cache.contains(k_live)
+
+    def test_recycled_warm_container_serves_no_stale_bare_key(self):
+        # Two sequential jobs use the SAME bare task keys with different
+        # values, on one shared platform with a long keep-alive — the
+        # second job's fan-in completer re-fetches "left"/"right", and a
+        # bare-keyed container cache would hand it the first job's
+        # objects. Store-qualified cache keys (+ purge invalidation)
+        # must keep the results exact.
+        def dag_with(v):
+            g = GraphBuilder()
+            a = g.add((lambda x: (lambda: x))(v), name="left")
+            b = g.add((lambda x: (lambda: x * 10))(v), name="right")
+            g.add(lambda x, y: x + y, a, b, name="root")
+            return g.build()
+
+        cfg = _engine_cfg(cost=CostModel(cold_start_ms=250.0))
+        substrate = Substrate(
+            cfg, PlatformConfig(keep_alive_s=600.0, cache=CacheConfig()),
+            tenants=(TenantSpec("t", 1792),))
+        with substrate.clock.actor():
+            sub0 = substrate.job_substrate("job0", "t")
+            r0 = WukongEngine(cfg).compute(dag_with(1), substrate=sub0)
+            sub0.kv.purge()  # what the orchestrator does on completion
+            sub1 = substrate.job_substrate("job1", "t")
+            r1 = WukongEngine(cfg).compute(dag_with(2), substrate=sub1)
+        assert r0.results == {"root": 11}
+        assert r1.results == {"root": 22}  # never 11, 12, or 21
+        # and the purge reclaimed job0's entries from every cache
+        reg = substrate.platform.caches
+        prefix = substrate.kv.namespace("job0").qualified_key("")
+        assert reg.invalidate_prefix(prefix) == 0  # nothing left to drop
+
+    def test_orchestrator_reports_cache_and_stays_deterministic(self):
+        cfg = OrchestratorConfig(
+            engine=_engine_cfg(),
+            platform=PlatformConfig(keep_alive_s=600.0,
+                                    cache=CacheConfig()),
+            workload=_tr_workload(n_jobs=6), max_concurrent_jobs=4)
+        r1 = JobOrchestrator(cfg).run()
+        r2 = JobOrchestrator(cfg).run()
+        assert r1.completed == 6 and r1.failed == 0
+        assert r1.cache and r1.cache["deposits"] > 0
+        assert r1.cache == r2.cache
+        assert r1.job_records == r2.job_records
+
+    def test_cacheless_orchestrator_report_has_empty_cache_block(self):
+        cfg = OrchestratorConfig(engine=_engine_cfg(),
+                                 workload=_tr_workload(n_jobs=4),
+                                 max_concurrent_jobs=4)
+        rep = JobOrchestrator(cfg).run()
+        assert rep.completed == 4
+        assert rep.cache == {}
