@@ -302,6 +302,7 @@ def main() -> None:
         fig16_scaling,
         fig17_recovery,
         fig18_locality,
+        fig19_streaming,
     )
     from benchmarks import common
 
@@ -381,6 +382,18 @@ def main() -> None:
                   dict(gemm_sizes=((512, 128),), tree_n=512),
                   dict(gemm_sizes=((512, 128), (1024, 128)), tree_n=1024,
                        capacities=(1 << 20, 4 << 20, 16 << 20))),
+        # Steady-state streaming via the trigger bus (event-fired jobs,
+        # windowed aggregation, dynamic-DAG parity, mid-stream crash).
+        # Smoke = the CI streaming gate: >= 64 window jobs, all four
+        # trigger sources live, bit-identical metrics across runs and
+        # substrates, exactly-once fires across a dispatcher crash.
+        "fig19": (fig19_streaming.run,
+                  dict(n_events=400, crash_ats=(12,),
+                       substrates=("event", "thread")),
+                  dict(n_events=400, crash_ats=(12, 40),
+                       substrates=("event", "thread")),
+                  dict(n_events=1200, crash_ats=(12, 40, 120),
+                       substrates=("event", "thread"), parity_n=64)),
     }
     mode = 0 if args.smoke else (1 if args.quick else 2)
     only = set(args.only.split(",")) if args.only else None
@@ -432,6 +445,8 @@ def main() -> None:
         if "fig18" in rows_by_fig:
             fig18_locality.check_gates(rows_by_fig["fig18"],
                                        **figs["fig18"][1])
+        if "fig19" in rows_by_fig:
+            fig19_streaming.check_gates(rows_by_fig["fig19"])
 
 
 if __name__ == "__main__":

@@ -6,7 +6,17 @@ from repro.core.cache import (
     CacheStats,
     ExecutorCache,
 )
-from repro.core.dag import DAG, Task, TaskRef
+from repro.core.dag import (
+    DAG,
+    EXPAND_BASE,
+    DynamicDAG,
+    Expansion,
+    ExpansionDelta,
+    ExpansionError,
+    Task,
+    TaskRef,
+    expansion_base_key,
+)
 from repro.core.engine import (
     ENGINES,
     CentralizedConfig,
@@ -27,7 +37,7 @@ from repro.core.faults import (
     FaultStats,
     SimulatedTaskFailure,
 )
-from repro.core.kvstore import CostModel, KVNamespace, ShardedKVStore
+from repro.core.kvstore import PURGED, CostModel, KVNamespace, ShardedKVStore
 from repro.core.orchestrator import (
     JobOrchestrator,
     JobRequest,
@@ -50,6 +60,16 @@ from repro.core.statemachine import (
     TERMINAL_STATES,
     InvalidTransition,
     JobStateMachine,
+)
+from repro.core.triggers import (
+    TRIGGER_NS,
+    TRIGGER_SOURCES,
+    StreamConfig,
+    StreamingReport,
+    TriggerBus,
+    TriggerRule,
+    stream_arrivals,
+    stream_source,
 )
 from repro.core.optimize import (
     ALL_PASSES,
@@ -85,13 +105,17 @@ def __getattr__(name):
 
 __all__ = [
     "DAG", "Task", "TaskRef", "GraphBuilder", "delayed_graph",
+    "DynamicDAG", "Expansion", "ExpansionDelta", "ExpansionError",
+    "EXPAND_BASE", "expansion_base_key",
     "ENGINES", "EngineConfig", "CentralizedConfig", "ServerfulConfig",
     "JobError", "JobReport", "JobSubstrate", "WukongEngine",
     "StrawmanEngine", "PubSubEngine", "ParallelInvokerEngine",
     "ServerfulEngine",
     "FaultConfig", "FaultInjector", "FaultStats", "SimulatedTaskFailure",
     "CacheConfig", "CacheStats", "ExecutorCache", "CacheRegistry",
-    "CostModel", "ShardedKVStore", "KVNamespace",
+    "CostModel", "ShardedKVStore", "KVNamespace", "PURGED",
+    "TriggerBus", "TriggerRule", "StreamConfig", "StreamingReport",
+    "TRIGGER_NS", "TRIGGER_SOURCES", "stream_arrivals", "stream_source",
     "JobOrchestrator", "JobRequest", "OrchestratorConfig",
     "OrchestratorCrashed", "OrchestratorReport", "Substrate", "TenantSpec",
     "WorkloadConfig", "generate_workload",

@@ -10,15 +10,31 @@ was "a modification of the Python-written Dask distributed scheduler"; we
 keep the same representation so the serverful baseline and WUKONG run the
 exact same graphs (paper §V-D notes this is what made their comparison
 possible).
+
+Dynamic DAGs (Triggerflow-style reactive workflows): a task of a
+:class:`DynamicDAG` may return an :class:`Expansion` instead of a plain
+value — a data-dependent subgraph appended to the running job at the
+point of the expanding task (fan-outs whose width depends on the data,
+iterate-until-converged loops). See :meth:`DynamicDAG.apply_expansion`
+for the rewrite rule that keeps an expanded run bit-identical — results,
+``charged_ms``, and ``kv_stats`` — to the statically pre-expanded
+equivalent graph.
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import pickle
+import threading
 from typing import Any, Callable, Iterable, Mapping
 
 
 class CycleError(ValueError):
     pass
+
+
+class ExpansionError(ValueError):
+    """An invalid runtime expansion (bad subgraph, depth exceeded)."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -155,6 +171,312 @@ class DAG:
         for k in self.topological_order():
             depth[k] = 1 + max((depth[d] for d in self.deps[k]), default=0)
         return max(depth.values(), default=0)
+
+
+# ---------------------------------------------------------------------------
+# Dynamic DAGs: runtime graph expansion (Triggerflow-style reactive
+# workflows; the ROADMAP streaming open item).
+# ---------------------------------------------------------------------------
+
+# Placeholder dependency key inside an Expansion's subgraph: rewritten at
+# apply time to the synthetic base node that holds the expanding task's
+# own output value.
+EXPAND_BASE = "__expand_base__"
+
+
+def expansion_base_key(key: str, n: int) -> str:
+    """The synthetic base node's key for the ``n``-th expansion of
+    ``key`` (0-based). Exposed so tests/benchmarks can construct the
+    statically pre-expanded equivalent graph with matching names."""
+    return f"{key}/__base{n}__"
+
+
+@dataclasses.dataclass(frozen=True)
+class Expansion:
+    """Returned by a task of a :class:`DynamicDAG` instead of a plain
+    value: append ``tasks`` downstream of this task at runtime.
+
+    ``value``  — the expanding task's own output; the subgraph reads it
+                 by depending on :data:`EXPAND_BASE`.
+    ``tasks``  — the subgraph. Tasks may only depend on ``EXPAND_BASE``
+                 or on sibling tasks of the same expansion
+                 (self-contained — the property that makes the expanded
+                 run charge-identical to the pre-expanded equivalent).
+    ``final``  — the key (within ``tasks``) of the subgraph's sink; its
+                 task is re-bound under the expanding task's key, so the
+                 original downstream consumers transparently read the
+                 converged/aggregated result. ``final`` itself may
+                 return another Expansion (iterate-until-converged),
+                 bounded by ``DynamicDAG.max_expansion_depth``.
+    """
+
+    value: Any
+    tasks: tuple[Task, ...]
+    final: str
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "tasks", tuple(self.tasks))
+
+
+@dataclasses.dataclass(frozen=True)
+class ExpansionDelta:
+    """What :meth:`DynamicDAG.apply_expansion` changed — everything the
+    executor and the incremental scheduler need, O(|subgraph|).
+
+    ``topo`` is the delta in topological order: the base node first, the
+    re-bound expanding key last. ``fan_in_widths`` maps every task key
+    whose in-degree the expansion (re)defined to its new width > 1; the
+    executor registers these host-side (uncharged — the batched
+    registration round trip at job start already paid, see
+    ``ShardedKVStore.rebind_counter``).
+
+    ``replayed=True`` marks a duplicate application: the expanding task
+    ran twice (a resumed run whose crashed predecessor already pushed
+    the fan-in counters past their widths, or a speculative duplicate)
+    and the graph already holds this exact subgraph. The caller must
+    then NOT touch the counters — the first application's subgraph is
+    live on them."""
+
+    key: str
+    base_key: str
+    value: Any
+    new_keys: tuple[str, ...]
+    topo: tuple[str, ...]
+    fan_in_widths: Mapping[str, int]
+    replayed: bool = False
+
+
+def _value_fingerprint(value: Any) -> Any:
+    """Stable digest of an expansion's value, part of the replay-dedupe
+    signature. Unpicklable values get a unique token — they can never be
+    proven to be a duplicate execution, so they never dedupe (a fresh
+    install, which then fails on key collisions if it truly was one)."""
+    try:
+        return hashlib.sha1(pickle.dumps(value, protocol=4)).hexdigest()
+    except Exception:
+        return object()
+
+
+def _retarget(task: Task, key: str, base: str) -> Task:
+    """``task`` re-keyed to ``key`` with EXPAND_BASE refs bound to
+    ``base``."""
+
+    def bind(a: Any) -> Any:
+        if isinstance(a, TaskRef) and a.key == EXPAND_BASE:
+            return TaskRef(base)
+        return a
+
+    return Task(key, task.fn, tuple(bind(a) for a in task.args),
+                {k: bind(v) for k, v in task.kwargs.items()})
+
+
+class DynamicDAG(DAG):
+    """A DAG whose tasks may grow the graph at runtime.
+
+    The expansion rewrite (exactly mirrored by a statically pre-expanded
+    graph, which is what the parity tests exploit):
+
+    - a synthetic *base* node ``expansion_base_key(key, n)`` is inserted
+      where the expanding task ``key`` stood: it inherits ``key``'s
+      original args/deps (upstream children lists are retargeted in
+      place, preserving positions) and holds the expanding task's output
+      value;
+    - the subgraph tasks are added with ``EXPAND_BASE`` bound to the
+      base node;
+    - the ``final`` task is re-bound under ``key`` itself, keeping
+      ``key``'s original downstream edges intact.
+
+    Construction order matters for bit-identical fan-out behavior: new
+    children lists append in ``Expansion.tasks`` order, so the
+    equivalent static graph must list the base task at the expanding
+    task's original position and the subgraph tasks (with ``final``
+    keyed as ``key``) after it, in the same order.
+
+    ``max_expansion_depth`` bounds chained expansions (a re-bound final
+    that expands again), so a non-converging iterate loop fails loudly
+    instead of growing forever.
+    """
+
+    def __init__(self, tasks: Iterable[Task], max_expansion_depth: int = 8):
+        if not isinstance(max_expansion_depth, int) \
+                or isinstance(max_expansion_depth, bool) \
+                or max_expansion_depth < 1:
+            raise ValueError(
+                f"max_expansion_depth must be a positive int, got "
+                f"{max_expansion_depth!r}")
+        super().__init__(tasks)
+        self.max_expansion_depth = max_expansion_depth
+        self._expand_lock = threading.Lock()
+        self._expansion_counts: dict[str, int] = {}
+        self._depths: dict[str, int] = {}
+        # (key, subgraph keys, final) -> the delta it produced, so a
+        # duplicate execution of an expanding task (idempotent-replay
+        # crash model) replays the recorded delta instead of colliding.
+        self._applied: dict[Any, ExpansionDelta] = {}
+        self._topo_dirty = False
+        self.expansions_applied = 0
+
+    def topological_order(self) -> list[str]:
+        with self._expand_lock:
+            if self._topo_dirty:
+                # Recompute (and re-verify acyclicity globally) on
+                # demand: expansions themselves stay O(|subgraph|).
+                self._check_acyclic()
+                self._topo_dirty = False
+        return list(self._topo_order)
+
+    def apply_expansion(self, key: str, expansion: Expansion) \
+            -> ExpansionDelta:
+        """Install ``expansion`` at ``key``; returns the delta. Raises
+        :class:`ExpansionError` on an invalid subgraph or when the
+        chained-expansion depth bound is exceeded."""
+        with self._expand_lock:
+            return self._apply_locked(key, expansion)
+
+    def _apply_locked(self, key: str, expansion: Expansion) \
+            -> ExpansionDelta:
+        if key not in self.tasks:
+            raise ExpansionError(f"unknown task {key!r}")
+        sig = (key, tuple(t.key for t in expansion.tasks), expansion.final,
+               _value_fingerprint(expansion.value))
+        prior = self._applied.get(sig)
+        if prior is not None:
+            # The same task produced the same expansion — same subgraph
+            # AND same value — again: a duplicate execution (a resumed
+            # run whose crashed predecessor already pushed the fan-in
+            # counters past their widths re-runs the expanding task with
+            # identical inputs). Every KV write below a task is
+            # if-absent/idempotent by design, and this makes graph
+            # growth match — the duplicate executor relabels onto the
+            # already-installed subgraph and falls through the normal
+            # (idempotent) write path. A matching subgraph with a NEW
+            # value is NOT a replay: that is the next round of an
+            # iterate-until-converged loop whose final re-expands under
+            # the same key with the same single-task shape.
+            return dataclasses.replace(prior, value=expansion.value,
+                                       replayed=True)
+        depth = self._depths.get(key, 0) + 1
+        if depth > self.max_expansion_depth:
+            raise ExpansionError(
+                f"expansion depth {depth} at {key!r} exceeds "
+                f"max_expansion_depth={self.max_expansion_depth}")
+        tasks = expansion.tasks
+        if not tasks:
+            raise ExpansionError("empty expansion")
+        keys = [t.key for t in tasks]
+        if len(set(keys)) != len(keys):
+            raise ExpansionError(f"duplicate keys in expansion: {keys}")
+        if expansion.final not in set(keys):
+            raise ExpansionError(
+                f"final {expansion.final!r} not among expansion tasks")
+        collisions = [k for k in keys if k in self.tasks or k == EXPAND_BASE]
+        if collisions:
+            raise ExpansionError(
+                f"expansion keys collide with existing tasks: {collisions}")
+        n = self._expansion_counts.get(key, 0)
+        base = expansion_base_key(key, n)
+        if base in self.tasks:
+            raise ExpansionError(f"base key {base!r} already exists")
+        allowed = set(keys) | {EXPAND_BASE}
+        sub_deps: dict[str, tuple[str, ...]] = {}
+        uses_base = False
+        for t in tasks:
+            deps = t.dependencies()
+            bad = [d for d in deps if d not in allowed]
+            if bad:
+                raise ExpansionError(
+                    f"expansion task {t.key!r} depends on {bad}; only "
+                    f"EXPAND_BASE and sibling expansion tasks are allowed "
+                    f"(self-contained expansions)")
+            if expansion.final in deps:
+                raise ExpansionError(
+                    f"expansion task {t.key!r} depends on the final task "
+                    f"{expansion.final!r}")
+            if not deps:
+                raise ExpansionError(
+                    f"expansion task {t.key!r} has no dependencies and "
+                    f"would never be triggered")
+            if EXPAND_BASE in deps:
+                uses_base = True
+            sub_deps[t.key] = deps
+        if not uses_base:
+            raise ExpansionError(
+                "no expansion task depends on EXPAND_BASE — the subgraph "
+                "has no entry point")
+        # Local topological order over {base} + subgraph (+ key as the
+        # re-bound final) — also the delta acyclicity check.
+        order = [base]
+        indeg = {k: sum(1 for d in sub_deps[k] if d != EXPAND_BASE)
+                 for k in keys}
+        stack = [k for k in keys if indeg[k] == 0]
+        rchildren: dict[str, list[str]] = {k: [] for k in keys}
+        for k in keys:
+            for d in sub_deps[k]:
+                if d != EXPAND_BASE:
+                    rchildren[d].append(k)
+        while stack:
+            k = stack.pop()
+            order.append(k)
+            for c in rchildren[k]:
+                indeg[c] -= 1
+                if indeg[c] == 0:
+                    stack.append(c)
+        if len(order) != len(keys) + 1:
+            raise ExpansionError("expansion subgraph contains a cycle")
+
+        # ---- install (validation done; mutate atomically) -----------------
+        self._expansion_counts[key] = n + 1
+        orig = self.tasks[key]
+        # Base node: the original task, re-keyed. Its fn is never run by
+        # the dynamic executor (the expanding task already ran and its
+        # value rides the relabel); recording the original fn keeps the
+        # graph structurally identical to the static equivalent.
+        self.tasks[base] = Task(base, orig.fn, orig.args, orig.kwargs)
+        self.deps[base] = self.deps[key]
+        self.children[base] = []
+        for d in self.deps[base]:
+            self.children[d] = [base if c == key else c
+                                for c in self.children[d]]
+        rebound: dict[str, str] = {expansion.final: key}
+        for t in tasks:
+            tk = rebound.get(t.key, t.key)
+            nt = _retarget(t, tk, base)
+            self.tasks[tk] = nt
+            self.deps[tk] = nt.dependencies()
+            if tk != key:
+                self.children[tk] = []
+            self._depths[tk] = depth
+        # Out-edges: appended in Expansion.tasks order (final contributes
+        # at its own position), matching a static graph that lists the
+        # subgraph tasks in the same order.
+        for t in tasks:
+            tk = rebound.get(t.key, t.key)
+            for d in self.deps[tk]:
+                self.children[d].append(tk)
+        self._depths[base] = depth
+        if key in self.leaves:
+            self.leaves = tuple(base if lf == key else lf
+                                for lf in self.leaves)
+        new_roots = [k for k in keys
+                     if rebound.get(k, k) != key
+                     and not self.children[rebound.get(k, k)]]
+        if new_roots:
+            self.roots = self.roots + tuple(new_roots)
+        self._topo_dirty = True
+        self.expansions_applied += 1
+        new_keys = tuple(k for k in keys if k != expansion.final)
+        # [base, ...subgraph in local topo order...], with the final
+        # task appearing under its re-bound name (``key``).
+        topo = tuple(rebound.get(k, k) for k in order)
+        widths = {k: len(self.deps[k])
+                  for k in [key, *new_keys]
+                  if len(self.deps[k]) > 1}
+        delta = ExpansionDelta(
+            key=key, base_key=base, value=expansion.value,
+            new_keys=new_keys, topo=topo, fan_in_widths=widths,
+        )
+        self._applied[sig] = delta
+        return delta
 
 
 def _literal(value: Any) -> Callable[[], Any]:

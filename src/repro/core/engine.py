@@ -35,7 +35,7 @@ import queue
 import threading
 from typing import TYPE_CHECKING, Any
 
-from repro.core.dag import DAG, TaskRef
+from repro.core.dag import DAG, DynamicDAG, TaskRef
 from repro.core.executor import (
     RESULTS_CHANNEL,
     ExecutorContext,
@@ -49,7 +49,7 @@ from repro.core.faults import (
     HeartbeatRegistry,
 )
 from repro.core.invoker import FanoutProxy, InvokerPool
-from repro.core.kvstore import CostModel, ShardedKVStore, sizeof
+from repro.core.kvstore import PURGED, CostModel, ShardedKVStore, sizeof
 from repro.core.optimize import OptimizeConfig, PassStats, ensure_compiled
 from repro.core.schedule import generate_static_schedules
 from repro.core.simclock import run_effects, task_clock
@@ -229,10 +229,21 @@ class _ResultWaiter:
     idle waiting costs zero wall time under the virtual clock and
     ``timeout_s`` means clock (simulated) seconds."""
 
-    def __init__(self, kv: ShardedKVStore, roots: tuple[str, ...]):
+    def __init__(self, kv: ShardedKVStore, roots: tuple[str, ...],
+                 dag: "DAG | None" = None):
         self.kv = kv
         self.roots = set(roots)
+        # Dynamic completion detection: on a DynamicDAG the total task
+        # count — and the root set — is not known at submit time (an
+        # expansion may add parentless sinks). The waiter re-reads the
+        # live root set each iteration instead of trusting the snapshot.
+        self._dag = dag
         self.sub = kv.subscribe(RESULTS_CHANNEL)
+
+    def _live_roots(self) -> set[str]:
+        if self._dag is not None:
+            self.roots = set(self._dag.roots)
+        return self.roots
 
     def close(self) -> None:
         """Release the results subscription. Without this every job
@@ -245,7 +256,7 @@ class _ResultWaiter:
         clock = self.kv.clock
         done: set[str] = set()
         deadline = clock.now_ms() + timeout_s * 1e3
-        while done != self.roots:
+        while done != self._live_roots():
             remaining_ms = deadline - clock.now_ms()
             if remaining_ms <= 0:
                 raise JobError(
@@ -255,9 +266,11 @@ class _ResultWaiter:
                 msg = yield ("get", self.sub, remaining_ms / 1e3)
             except queue.Empty:
                 continue
+            if msg is PURGED:
+                raise JobError("job namespace purged while awaiting results")
             if msg["type"] == "error":
                 raise JobError(f"task {msg['key']!r} failed: {msg['error']}")
-            if msg["key"] in self.roots:
+            if msg["key"] in self._live_roots():
                 done.add(msg["key"])
         results: dict[str, Any] = {}
         for k in sorted(self.roots):
@@ -399,9 +412,12 @@ class WukongEngine:
             stop=stop_job,
             resume=substrate.resume if substrate is not None else False,
             fault_stats=fault_stats,
+            schedule_set=schedule_set,
         )
 
-        waiter = _ResultWaiter(kv, dag.roots)
+        waiter = _ResultWaiter(
+            kv, dag.roots,
+            dag=dag if isinstance(dag, DynamicDAG) else None)
         t0_ms = clock.now_ms()
         # Metric stamps are relative to the job's t0 (the clock is
         # shared and does not restart per job).

@@ -39,7 +39,7 @@ import threading
 from typing import Any, Callable
 
 from repro.core.cache import CacheStats, ExecutorCache
-from repro.core.dag import DAG, TaskRef
+from repro.core.dag import DAG, Expansion, TaskRef
 from repro.core.faults import (
     ExecutorHeartbeat,
     FaultInjector,
@@ -104,6 +104,7 @@ class ExecutorContext:
         stop: Any = None,
         resume: bool = False,
         fault_stats: "FaultStats | None" = None,
+        schedule_set: Any = None,
     ):
         self.dag = dag
         self.kv = kv
@@ -135,6 +136,10 @@ class ExecutorContext:
         self.resume = resume
         # Shared per-job fault/retry observability counters (JobReport).
         self.fault_stats = fault_stats or FaultStats()
+        # The job's ScheduleSet (repro.core.schedule): dynamic-DAG
+        # expansions re-schedule incrementally through it. None for
+        # callers that never expand (tests building contexts by hand).
+        self.schedule_set = schedule_set
         # Per-job cache-tier counters (JobReport.cache_stats): container
         # caches count account-wide on their own; executors pass this
         # sink so the job's report never includes another tenant's hits.
@@ -496,6 +501,38 @@ class TaskExecutor:
                 yield ("flush",)
                 compute_ms = clock.now_ms() - t0
                 self.tasks_executed += 1
+
+            # ---- dynamic expansion (DynamicDAG) ----------------------
+            if isinstance(out, Expansion):
+                # The task grew the graph: install the subgraph, then
+                # relabel this walk to the synthetic base node carrying
+                # the task's own value and fall through to the NORMAL
+                # sink/fan-out path — every KV write, counter op, and
+                # spawn below is then identical to running the
+                # statically pre-expanded equivalent graph.
+                apply = getattr(dag, "apply_expansion", None)
+                if apply is None:
+                    raise RuntimeError(
+                        f"task {current!r} returned an Expansion but the "
+                        f"DAG is not a DynamicDAG")
+                delta = apply(current, out)
+                # Fan-in counters for the delta: registered/re-bound
+                # host-side, uncharged (the job-start batched
+                # registration already paid; see
+                # ShardedKVStore.rebind_counter). A replayed delta (the
+                # task ran twice — resume over a crashed run's counters,
+                # or a speculative duplicate) must leave the counters
+                # alone: the first application's subgraph is live on
+                # them, and a reset would strand its in-flight edges.
+                if not delta.replayed:
+                    for k, width in delta.fan_in_widths.items():
+                        kv.rebind_counter(_counter_id(k), width)
+                if self.ctx.schedule_set is not None:
+                    self.schedule = \
+                        self.ctx.schedule_set.expansion_schedule(delta)
+                current = delta.base_key
+                out = delta.value
+
             self.cache[current] = out
             # One sizeof walk per output, reused by metrics and as the
             # KV write's size hint (the store records it per key).

@@ -76,6 +76,21 @@ from repro.core.simclock import (
 # key lands on the same shard its bare key would.
 NAMESPACE_SEP = "::"
 
+
+class _Purged:
+    """Sentinel delivered to subscribers still blocked on a channel when
+    ``drop_namespace`` sweeps it away, so a consumer of a cancelled job
+    wakes up and can exit instead of waiting forever on a channel nobody
+    can publish to anymore. Compare with ``is PURGED``."""
+
+    __slots__ = ()
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return "<PURGED>"
+
+
+PURGED = _Purged()
+
 # Per-actor stats sink: while a KVNamespace call is on the stack, the
 # parent store's counter bumps are mirrored into the view's own KVStats
 # (the view can't re-derive byte counts — entry sizes are recorded once
@@ -340,6 +355,12 @@ class ShardedKVStore:
         # platform's container caches, repro.core.cache) reclaim a
         # finished job's entries in the same breath as its KV objects.
         self._purge_listeners: list[Any] = []
+        # Called host-side with ``(key, nbytes)`` after every durable
+        # object write (put / put_if_absent / deposit stores), with the
+        # store-qualified key. This is the trigger bus's kv_write event
+        # source: listeners observe, they do not charge — the written
+        # bytes already paid their round trip.
+        self._write_listeners: list[Any] = []
         self.stats = KVStats()
         self._stats_lock = threading.Lock()
 
@@ -494,6 +515,7 @@ class ShardedKVStore:
             yield from self._write_stripes_g(key, value, nbytes, n_stripes,
                                              if_absent=False)
             self._bump(puts=1, striped_puts=1, bytes_written=nbytes)
+            self._notify_write(key, nbytes)
             return
         shard = self._shard(key)
         yield from self._pay_g(shard, nbytes)
@@ -504,6 +526,7 @@ class ShardedKVStore:
             # the overwritten value was striped: reclaim its stripes
             self._drop_stripes(key, old.n_stripes)
         self._bump(puts=1, bytes_written=nbytes)
+        self._notify_write(key, nbytes)
 
     def put(self, key: str, value: Any, nbytes: int | None = None) -> None:
         run_effects(self.clock, self.put_g(key, value, nbytes))
@@ -524,6 +547,7 @@ class ShardedKVStore:
             if not ok:
                 return False
             self._bump(puts=1, striped_puts=1, bytes_written=nbytes)
+            self._notify_write(key, nbytes)
             return True
         yield from self._pay_g(shard, nbytes)
         with shard.lock:
@@ -531,6 +555,7 @@ class ShardedKVStore:
                 return False
             shard.data[key] = _Entry(value, nbytes)
         self._bump(puts=1, bytes_written=nbytes)
+        self._notify_write(key, nbytes)
         return True
 
     def put_if_absent(self, key: str, value: Any,
@@ -717,6 +742,8 @@ class ShardedKVStore:
             striped_puts=sum(1 for _, _, n in stored if n > 1),
             bytes_written=sum(nb for _, nb, _ in stored),
         )
+        for key, nbytes, _ in stored:
+            self._notify_write(key, nbytes)
         # Transfer time is charged outside the counter lock: the bytes are
         # already durable; only the simulated clock accounting remains.
         for key, nbytes, n_stripes in stored:
@@ -748,6 +775,23 @@ class ShardedKVStore:
         with self._counter_lock:
             cur = self._counters.get(counter_id, 0)
             return len(cur) if isinstance(cur, set) else int(cur)
+
+    def rebind_counter(self, counter_id: str, width: int) -> None:
+        """Host-side (uncharged) reset of a counter to a new width with
+        no recorded edges. Used when a dynamic-DAG expansion rebinds a
+        task key to the tail of its expansion subgraph: the key's fan-in
+        is now the subgraph's, and the edges satisfied under the OLD
+        binding must not count toward it. Uncharged by design — the
+        batched ``register_counters_g`` round trip at job start already
+        paid for registration, and counter ids never affect per-op
+        charges, so charge parity with a statically pre-expanded graph
+        is preserved (see repro.core.dag.DynamicDAG)."""
+        with self._counter_lock:
+            self._counter_widths[counter_id] = width
+            if self.counter_mode == "edge_set":
+                self._counters[counter_id] = set()
+            else:
+                self._counters[counter_id] = 0
 
     # -- pub/sub (paper §III-B) ---------------------------------------------
     def subscribe(self, channel: str) -> Any:
@@ -907,6 +951,26 @@ class ShardedKVStore:
         key on this, so bare keys of different jobs never collide."""
         return key
 
+    # -- write notifications (trigger bus event source) ---------------------
+    def add_write_listener(self, fn: Any) -> None:
+        """Register ``fn(key, nbytes)`` to run host-side after every
+        durable object write, with the store-qualified key. Idempotent.
+        Listeners must be cheap and must not perform charged KV ops —
+        they run inside the writer's op, after its charges."""
+        if fn not in self._write_listeners:
+            self._write_listeners.append(fn)
+
+    def remove_write_listener(self, fn: Any) -> None:
+        """Deregister a write listener (no-op when absent)."""
+        try:
+            self._write_listeners.remove(fn)
+        except ValueError:
+            pass
+
+    def _notify_write(self, key: str, nbytes: int) -> None:
+        for fn in tuple(self._write_listeners):
+            fn(key, nbytes)
+
     # -- multi-tenancy ------------------------------------------------------
     def add_purge_listener(self, fn: Any) -> None:
         """Register ``fn(prefix)`` to run after ``drop_namespace``
@@ -954,6 +1018,14 @@ class ShardedKVStore:
                 del self._counter_widths[cid]
         with self._chan_lock:
             for ch in [c for c in self._channels if c.startswith(prefix)]:
+                # Release still-subscribed queues, not just the channel
+                # entry: a consumer blocked on a dropped channel would
+                # otherwise wait forever (nobody can publish to it again)
+                # and its subscription would read as a leak. The PURGED
+                # sentinel wakes it so it can exit and the subscriber
+                # count under the dropped prefix really ends at 0.
+                for q in self._channels[ch]:
+                    q.put(PURGED)
                 del self._channels[ch]
         with self._journal_lock:
             for j in [j for j in self._journals if j.startswith(prefix)]:
@@ -1102,6 +1174,9 @@ class KVNamespace:
 
     def counter_value(self, counter_id: str) -> int:
         return self.parent.counter_value(self._k(counter_id))
+
+    def rebind_counter(self, counter_id: str, width: int) -> None:
+        self.parent.rebind_counter(self._k(counter_id), width)
 
     # -- pub/sub ------------------------------------------------------------
     def subscribe(self, channel: str) -> Any:

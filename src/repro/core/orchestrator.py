@@ -69,6 +69,8 @@ from repro.core.statemachine import (
     TERMINAL_STATES,
     JobStateMachine,
 )
+from repro.core.triggers import StreamConfig, TriggerBus, TriggerRule, \
+    stream_source
 
 if TYPE_CHECKING:  # import cycle: repro.platform imports repro.core
     from repro.platform import FaaSPlatform, PlatformConfig
@@ -209,6 +211,12 @@ class JobRequest:
             block_flops = 2.0 * (rows / n_blocks) * cols * cols
             return tsqr_svd_dag(rows, cols=cols, n_blocks=n_blocks,
                                 ms_per_flop=self.compute_ms / block_flops)
+        if self.app == "dynamic_tree":
+            from repro.apps import dynamic_tree_reduction_dag
+
+            return dynamic_tree_reduction_dag(
+                self.size, compute_ms=self.compute_ms,
+                payload_bytes=self.payload_bytes)
         if self.app == "svc":
             from repro.apps import svc_dag
 
@@ -307,6 +315,10 @@ class Substrate:
         )
         self.clock = self.kv.clock
         self._control = None
+        # The live trigger bus generation on this substrate (recovery
+        # detaches the dead one's write listener before attaching its
+        # own — orphan source actors must not double-feed the new bus).
+        self.trigger_bus: "TriggerBus | None" = None
         self.platform: "FaaSPlatform | None" = None
         if platform is not None and not isolate_platform:
             self.platform = self._new_platform()
@@ -401,6 +413,16 @@ class OrchestratorConfig:
     # so crash→replay recovery can be exercised. Task-level faults stay
     # on ``engine.faults``; this config governs the control plane.
     faults: FaultConfig = dataclasses.field(default_factory=FaultConfig)
+    # Trigger-driven admission: persistent event->job rules (journaled
+    # in the ``__triggers__`` namespace, crash-recoverable) and an
+    # optional Poisson event stream feeding them. Rule actions must
+    # name a tenant from ``workload.tenants``. Empty = the PR 5
+    # behavior, bit for bit.
+    triggers: "tuple[TriggerRule, ...]" = ()
+    stream: "StreamConfig | None" = None
+    # First job_id the bus assigns to fired jobs (static workload ids
+    # must stay below it).
+    trigger_id_base: int = 1_000_000
 
 
 class OrchestratorCrashed(RuntimeError):
@@ -596,9 +618,21 @@ class JobOrchestrator:
             yield from machine.record_g(job.job_id, PENDING,
                                         at_ms=clock.now_ms(),
                                         payload=_job_spec(job))
+        bus = None
+        if self.config.triggers:
+            bus = self._make_bus(substrate)
+            for rule in self.config.triggers:
+                yield from bus.add_rule_g(rule)
         return (yield from self._dispatch_g(
             jobs, substrate, machine,
-            prior_records=[], resume_ids=frozenset(), recovered_jobs=0))
+            prior_records=[], resume_ids=frozenset(), recovered_jobs=0,
+            bus=bus))
+
+    def _make_bus(self, substrate: Substrate) -> TriggerBus:
+        bus = TriggerBus(substrate.kv, substrate.clock,
+                         id_base=self.config.trigger_id_base)
+        substrate.trigger_bus = bus
+        return bus
 
     def _recover_g(self, substrate: Substrate):
         """Replay-recovery as an effect generator: rebuild the state
@@ -609,6 +643,16 @@ class JobOrchestrator:
         namespaces), then dispatch the remainder."""
         machine = JobStateMachine(substrate.control())
         yield from machine.replay_g()
+        bus = None
+        if self.config.triggers:
+            # The dead generation's bus still observes writes (and the
+            # orphan sources it spawned still produce them): detach it
+            # before this generation's bus attaches, or every stream
+            # event would be double-delivered.
+            if substrate.trigger_bus is not None:
+                substrate.trigger_bus.detach()
+            bus = self._make_bus(substrate)
+            yield from bus.replay_g()
 
         to_run: "list[JobRequest]" = []
         all_jobs: "list[JobRequest]" = []
@@ -641,22 +685,43 @@ class JobOrchestrator:
                     # task outputs are reused, not re-executed).
                     resume_ids.add(job_id)
                     recovered += 1
+        if bus is not None:
+            # A crash between journaling a fire and journaling its
+            # job's PENDING record leaves a fired-but-unsubmitted job:
+            # the fire's journal payload carries the full spec, so
+            # re-journal and run it here — no fire is ever lost.
+            for frec in bus.fired_records():
+                if machine.state(frec["job_id"]) is None:
+                    job = _job_from_spec(frec["spec"])
+                    yield from machine.record_g(
+                        job.job_id, PENDING, at_ms=substrate.clock.now_ms(),
+                        payload=frec["spec"])
+                    all_jobs.append(job)
+                    to_run.append(job)
         return (yield from self._dispatch_g(
             all_jobs, substrate, machine,
             prior_records=prior_records, resume_ids=frozenset(resume_ids),
-            recovered_jobs=recovered, to_run=to_run))
+            recovered_jobs=recovered, to_run=to_run, bus=bus))
 
     def _dispatch_g(self, all_jobs: "list[JobRequest]",
                     substrate: Substrate, machine: JobStateMachine,
                     prior_records: "list[dict[str, Any]]",
                     resume_ids: "frozenset[int]", recovered_jobs: int,
-                    to_run: "list[JobRequest] | None" = None):
+                    to_run: "list[JobRequest] | None" = None,
+                    bus: "TriggerBus | None" = None):
         """The admission/dispatch/completion loop shared by fresh runs
         and recovery. ``all_jobs`` is the full workload (reporting);
         ``to_run`` the subset still needing execution (defaults to all).
         Every lifecycle transition is journaled through ``machine``
         BEFORE the action it records is performed, and the injector may
-        kill the dispatcher at the seeded crash points in between."""
+        kill the dispatcher at the seeded crash points in between.
+
+        With a trigger ``bus``, the dispatcher is also the bus's single
+        event consumer: source actors (timers, the stream writer, the
+        external-event relay) and the KV write listener all enqueue
+        tagged events onto the SAME completion queue, and every fire is
+        journaled, journaled PENDING, and admitted through the normal
+        ``launch_g`` path — trigger-fired jobs are first-class jobs."""
         cfg = self.config
         clock = substrate.clock
         injector = self.injector
@@ -699,8 +764,8 @@ class JobOrchestrator:
                     rep = yield from engine.compute_g(job.build_dag(), sub)
                 except Exception as exc:  # JobError, task bugs: record
                     error = repr(exc)
-                done_q.put((job, admit_ms, start_ms, clock.now_ms(),
-                            rep, error, sub))
+                done_q.put(("done", (job, admit_ms, start_ms,
+                                     clock.now_ms(), rep, error, sub)))
 
             yield from machine.record_g(job.job_id, RUNNING,
                                         at_ms=clock.now_ms())
@@ -720,7 +785,55 @@ class JobOrchestrator:
                     job.name)["billed_usd"]
             return 0.0
 
-        while len(records) < len(to_run):
+        # -- trigger plumbing ------------------------------------------
+        n_expected = len(to_run)
+        n_sources = 0
+        sources_done = 0
+        close_sent = bus is None
+
+        def fires_g(ev: "dict[str, Any]"):
+            """Offer one event to the bus; journal each fire, journal
+            its job PENDING, and hand it to the normal admission path."""
+            nonlocal n_expected
+            for due in bus.match(ev):
+                spec = yield from bus.fire_g(due, clock.now_ms())
+                if spec is None:
+                    continue  # fire journaled by a dead generation
+                job = _job_from_spec(spec)
+                yield from machine.record_g(job.job_id, PENDING,
+                                            at_ms=clock.now_ms(),
+                                            payload=dict(spec))
+                all_jobs.append(job)
+                n_expected += 1
+                ready.append(job)
+
+        if bus is not None:
+            bus.attach(done_q)
+            for rule in bus.rules.values():
+                if rule.source == "timer":
+                    clock.spawn(bus.timer_actor(rule, done_q),
+                                name=f"timer-{rule.rule_id}")
+                    n_sources += 1
+            if cfg.stream is not None:
+                clock.spawn(
+                    stream_source(cfg.stream, substrate.kv, clock, bus,
+                                  done_q),
+                    name="stream-source")
+                n_sources += 1
+            clock.spawn(bus.relay_actor(done_q), name="trigger-relay")
+            n_sources += 1
+            # Re-offer completions journaled by dead generations: a
+            # ``job_completed`` fire journaled before the crash is
+            # deduped here; one the crash cut off between the terminal
+            # journal and the fire journal fires now. Nothing is lost
+            # or doubled either way.
+            for rec in prior_records:
+                bus.job_finished(rec, rec.get("end_ms", clock.now_ms()))
+                yield from fires_g({"source": "job_completed",
+                                    "record": rec,
+                                    "at_ms": clock.now_ms()})
+
+        while len(records) < n_expected or sources_done < n_sources:
             now = clock.now_ms()
             while pending and pending[0].arrival_ms <= now:
                 ready.append(pending.popleft())
@@ -733,6 +846,15 @@ class JobOrchestrator:
                     tenant_running.get(job.tenant, 0) + 1)
                 n_running += 1
                 yield from launch_g(job)
+            if (bus is not None and not close_sent
+                    and sources_done >= n_sources - 1
+                    and len(records) >= n_expected
+                    and not pending and not ready):
+                # Every bounded source is finished and every job is
+                # accounted for: stop the relay (the one open-ended
+                # source) so the loop can drain and exit.
+                yield from bus.close_g()
+                close_sent = True
             try:
                 if pending:
                     wait_s = (pending[0].arrival_ms - clock.now_ms()) / 1e3
@@ -741,7 +863,14 @@ class JobOrchestrator:
                     msg = yield ("get", done_q, None)
             except _queue.Empty:
                 continue  # an arrival came due
-            job, admit_ms, start_ms, end_ms, rep, error, sub = msg
+            tag, body = msg
+            if tag == "source_done":
+                sources_done += 1
+                continue
+            if tag == "event":
+                yield from fires_g(body)
+                continue
+            job, admit_ms, start_ms, end_ms, rep, error, sub = body
             tenant_running[job.tenant] -= 1
             n_running -= 1
             rec: "dict[str, Any]" = {
@@ -781,6 +910,11 @@ class JobOrchestrator:
                 # the shared store. Recovery purges it.
                 raise OrchestratorCrashed("complete", substrate, injector)
             records.append(rec)
+            if bus is not None:
+                bus.job_finished(rec, end_ms)
+                yield from fires_g({"source": "job_completed",
+                                    "record": rec,
+                                    "at_ms": clock.now_ms()})
             # Reclaim the finished job's namespaced objects/counters
             # from the shared store: memory stays O(concurrent
             # jobs), not O(total traffic). Host-side (no clock
@@ -790,6 +924,8 @@ class JobOrchestrator:
 
         # All jobs done; counters are stable (the substrate serializes
         # this reduction against any leftover actors).
+        if bus is not None:
+            bus.detach()
         return self._reduce(all_jobs, prior_records + records, substrate,
                             tenant_memory, isolated_stats,
                             recovered_jobs=recovered_jobs)

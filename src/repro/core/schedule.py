@@ -34,6 +34,7 @@ from __future__ import annotations
 
 import dataclasses
 import pickle
+import threading as _threading
 from collections.abc import Mapping as _MappingABC
 from typing import Iterator, Mapping
 
@@ -113,14 +114,36 @@ class ScheduleSet:
 
     def covering_schedule(self, key: str) -> StaticSchedule | None:
         """A schedule covering ``key``: O(1) through the precomputed
-        index, linear scan as a fallback for externally-built sets."""
+        index, linear scan as a fallback for externally-built sets.
+        The index hit is re-verified with ``covers`` — on a DynamicDAG a
+        key added at runtime may map to a leaf whose (pre-expansion)
+        schedule does not actually cover it."""
         leaf = self.covering.get(key)
         if leaf is not None:
-            return self.schedules.get(leaf)
+            sched = self.schedules.get(leaf)
+            if sched is not None and sched.covers(key):
+                return sched
         for sched in self.schedules.values():
             if sched.covers(key):
                 return sched
         return None
+
+    def expansion_schedule(self, delta) -> StaticSchedule:
+        """Incremental re-scheduling after a runtime expansion
+        (``DynamicDAG.apply_expansion``): a schedule rooted at the
+        expansion's base node, built in O(|subgraph|) by extending the
+        O(V+E) sweep's retained reach/size tables over the delta —
+        downstream reach of the re-bound key is reused, never re-swept.
+        Falls back to a full reachability walk for schedule sets built
+        by the reference DFS generator."""
+        sched = self.schedules
+        if isinstance(sched, _LeafSchedules):
+            return sched.extend_for_expansion(self.dag, delta)
+        nodes = self.dag.reachable_from(delta.base_key)
+        return _make_schedule(
+            self.dag, delta.base_key, nodes,
+            getattr(self.dag, "clusters", {}),
+            getattr(self.dag, "delayed_fanins", frozenset()))
 
 
 def _counter_id(key: str) -> str:
@@ -177,7 +200,7 @@ class _LeafSchedules(_MappingABC):
     """
 
     __slots__ = ("_leaves", "_leafset", "_reach", "_csize", "_clusters",
-                 "_delayed", "_cache")
+                 "_delayed", "_cache", "_extend_lock")
 
     def __init__(self, leaves, reach, csize, clusters, delayed):
         self._leaves = leaves
@@ -187,6 +210,49 @@ class _LeafSchedules(_MappingABC):
         self._clusters = clusters
         self._delayed = delayed
         self._cache: dict[str, StaticSchedule] = {}
+        # Serializes runtime-expansion table extensions (real concurrency
+        # only exists in the realtime clock mode; the virtual substrates
+        # run one actor at a time).
+        self._extend_lock = _threading.Lock()
+
+    def extend_for_expansion(self, dag, delta) -> StaticSchedule:
+        """Extend the retained reach/size tables over an expansion delta
+        (``delta.topo`` = base first, re-bound key last) and return the
+        schedule rooted at the base node. O(|subgraph|): the re-bound
+        key's downstream reach is already in the tables (its out-edges
+        did not change) and is reused as-is."""
+        reach, csize = self._reach, self._csize
+        tasks, children = dag.tasks, dag.children
+        with self._extend_lock:
+            for k in reversed(delta.topo):
+                if k == delta.key:
+                    continue  # downstream reach unchanged; reuse
+                item = (len(k)
+                        + len(getattr(tasks[k].fn, "__name__", "fn"))
+                        + _CODE_ITEM_BYTES)
+                cs = children[k]
+                if len(cs) == 1:
+                    c = cs[0]
+                    reach[k] = reach[c] | {k}
+                    csize[k] = csize[c] + item
+                elif not cs:
+                    reach[k] = frozenset((k,))
+                    csize[k] = item
+                else:
+                    union: set = {k}
+                    for c in cs:
+                        union |= reach[c]
+                    r = frozenset(union)
+                    reach[k] = r
+                    csize[k] = sum(
+                        len(n)
+                        + len(getattr(tasks[n].fn, "__name__", "fn"))
+                        + _CODE_ITEM_BYTES
+                        for n in r)
+            base = delta.base_key
+            return _new_schedule(
+                base, reach[base], _CODE_BASE_BYTES + csize[base],
+                self._clusters, self._delayed)
 
     def __getitem__(self, leaf: str) -> StaticSchedule:
         s = self._cache.get(leaf)
