@@ -15,6 +15,8 @@ The 6→7 gap is the warm pool's contribution.
 """
 from __future__ import annotations
 
+from benchmarks import common
+from repro.apps import tree_reduction_dag
 from repro.core import (
     EngineConfig,
     ParallelInvokerEngine,
@@ -22,9 +24,6 @@ from repro.core import (
     StrawmanEngine,
     WukongEngine,
 )
-
-from benchmarks import common
-from repro.apps import tree_reduction_dag
 
 
 def run(n: int = 512, delay_ms: float = 20.0,

@@ -23,11 +23,10 @@ runs produce bit-identical ``platform_stats`` including billed USD
 """
 from __future__ import annotations
 
-from repro.core import ServerfulConfig, ServerfulEngine
-from repro.platform import PlatformConfig
-
 from benchmarks import common
 from repro.apps import tree_reduction_dag
+from repro.core import ServerfulConfig, ServerfulEngine
+from repro.platform import PlatformConfig
 
 
 def _pstat_row(label: str, r: dict, derived: str = "") -> dict:

@@ -27,6 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 
+from benchmarks import common
 from repro.core import (
     EngineConfig,
     JobOrchestrator,
@@ -34,8 +35,6 @@ from repro.core import (
     TenantSpec,
     WorkloadConfig,
 )
-
-from benchmarks import common
 
 # Memory ladder cycled over generated tenants: two standard functions,
 # one small/slow/cheap-per-GB-s, one large/fast.

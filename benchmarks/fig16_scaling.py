@@ -34,16 +34,15 @@ import sys
 import time
 from typing import Any
 
+from benchmarks import common
+from repro.apps import tree_reduction_dag
+from repro.apps.tree_reduction import tree_reduction_expected
 from repro.core import (
     EngineConfig,
     WukongEngine,
     clock_for_scale,
     drain_worker_cache,
 )
-from repro.apps import tree_reduction_dag
-from repro.apps.tree_reduction import tree_reduction_expected
-
-from benchmarks import common
 
 GATE_LEAVES = 4096        # micro tier the >= 5x speedup gate runs at
 GATE_MIN_SPEEDUP = 5.0

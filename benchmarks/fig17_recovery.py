@@ -28,6 +28,7 @@ against the uncrashed baseline on:
 """
 from __future__ import annotations
 
+from benchmarks import common
 from repro.core import (
     EngineConfig,
     FaultConfig,
@@ -36,8 +37,6 @@ from repro.core import (
     TenantSpec,
     WorkloadConfig,
 )
-
-from benchmarks import common
 
 CRASH_POINTS = ("admit", "dispatch", "complete")
 

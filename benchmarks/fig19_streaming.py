@@ -33,6 +33,7 @@ import hashlib
 
 import numpy as np
 
+from benchmarks import common
 from repro.apps import (
     dynamic_tree_reduction_dag,
     dynamic_tree_reduction_expected,
@@ -49,8 +50,6 @@ from repro.core import (
     WorkloadConfig,
     WukongEngine,
 )
-
-from benchmarks import common
 
 _TENANTS = (TenantSpec("tenant-a"), TenantSpec("tenant-b"))
 

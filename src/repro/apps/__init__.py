@@ -1,13 +1,13 @@
 """Paper workloads (§V) expressed as blocked-array DAGs with JAX payloads."""
-from repro.apps.tree_reduction import tree_reduction_dag
-from repro.apps.gemm import gemm_dag
-from repro.apps.svd import tsqr_svd_dag, randomized_svd_dag
-from repro.apps.svc import svc_dag
 from repro.apps.dynamic import (
     dynamic_tree_reduction_dag,
     dynamic_tree_reduction_expected,
     static_tree_reduction_equivalent,
 )
+from repro.apps.gemm import gemm_dag
+from repro.apps.svc import svc_dag
+from repro.apps.svd import tsqr_svd_dag, randomized_svd_dag
+from repro.apps.tree_reduction import tree_reduction_dag
 
 __all__ = [
     "tree_reduction_dag",

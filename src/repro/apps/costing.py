@@ -28,7 +28,7 @@ def flop_costed(fn: Callable[..., Any], flops: float,
         if ms_per_flop > 0:
             simulated_compute(flops * ms_per_flop)
         if sleep_per_flop > 0:
-            time.sleep(flops * sleep_per_flop)
+            time.sleep(flops * sleep_per_flop)  # lint: allow(REPRO001) — opt-in real-sleep knob, off by default
         return fn(*a, **kw)
 
     wrapped.__name__ = getattr(fn, "__name__", "task")

@@ -48,7 +48,7 @@ def tree_reduction_dag(
         if compute_ms > 0:
             simulated_compute(compute_ms)
         if sleep_s > 0:
-            time.sleep(sleep_s)
+            time.sleep(sleep_s)  # lint: allow(REPRO001) — opt-in real-sleep knob, off by default
 
     def make_add(a: float, b: float):
         def leaf_add() -> np.ndarray:

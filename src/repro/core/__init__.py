@@ -38,6 +38,14 @@ from repro.core.faults import (
     SimulatedTaskFailure,
 )
 from repro.core.kvstore import PURGED, CostModel, KVNamespace, ShardedKVStore
+from repro.core.optimize import (
+    ALL_PASSES,
+    NO_PASSES,
+    CompiledDAG,
+    OptimizeConfig,
+    PassStats,
+    compile_dag,
+)
 from repro.core.orchestrator import (
     JobOrchestrator,
     JobRequest,
@@ -48,6 +56,17 @@ from repro.core.orchestrator import (
     TenantSpec,
     WorkloadConfig,
     generate_workload,
+)
+from repro.core.schedule import StaticSchedule, generate_static_schedules
+from repro.core.simclock import (
+    EventClock,
+    RealtimeClock,
+    VirtualClock,
+    clock_for_scale,
+    drain_worker_cache,
+    run_effects,
+    simulated_compute,
+    worker_cache_size,
 )
 from repro.core.statemachine import (
     ADMITTED,
@@ -70,25 +89,6 @@ from repro.core.triggers import (
     TriggerRule,
     stream_arrivals,
     stream_source,
-)
-from repro.core.optimize import (
-    ALL_PASSES,
-    NO_PASSES,
-    CompiledDAG,
-    OptimizeConfig,
-    PassStats,
-    compile_dag,
-)
-from repro.core.schedule import StaticSchedule, generate_static_schedules
-from repro.core.simclock import (
-    EventClock,
-    RealtimeClock,
-    VirtualClock,
-    clock_for_scale,
-    drain_worker_cache,
-    run_effects,
-    simulated_compute,
-    worker_cache_size,
 )
 
 

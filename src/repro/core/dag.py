@@ -28,13 +28,31 @@ import pickle
 import threading
 from typing import Any, Callable, Iterable, Mapping
 
+# The graph-integrity rules live in the standalone validation pass
+# (repro.analysis is a leaf package — no import cycle). CycleError,
+# ExpansionError and EXPAND_BASE are defined there and re-exported here,
+# the import path every caller and test already uses.
+from repro.analysis.dagcheck import (
+    EXPAND_BASE,
+    CycleError,
+    ExpansionError,
+    build_graph,
+    check_expansion,
+    toposort,
+)
 
-class CycleError(ValueError):
-    pass
-
-
-class ExpansionError(ValueError):
-    """An invalid runtime expansion (bad subgraph, depth exceeded)."""
+__all__ = [
+    "DAG",
+    "DynamicDAG",
+    "EXPAND_BASE",
+    "CycleError",
+    "Expansion",
+    "ExpansionDelta",
+    "ExpansionError",
+    "Task",
+    "TaskRef",
+    "expansion_base_key",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -77,21 +95,7 @@ class DAG:
     """
 
     def __init__(self, tasks: Iterable[Task]):
-        self.tasks: dict[str, Task] = {}
-        for t in tasks:
-            if t.key in self.tasks:
-                raise ValueError(f"duplicate task key {t.key!r}")
-            self.tasks[t.key] = t
-        self.deps: dict[str, tuple[str, ...]] = {}
-        self.children: dict[str, list[str]] = {k: [] for k in self.tasks}
-        for k, t in self.tasks.items():
-            d = t.dependencies()
-            missing = [x for x in d if x not in self.tasks]
-            if missing:
-                raise ValueError(f"task {k!r} depends on missing keys {missing}")
-            self.deps[k] = d
-            for x in d:
-                self.children[x].append(k)
+        self.tasks, self.deps, self.children = build_graph(tasks)
         self.leaves: tuple[str, ...] = tuple(
             k for k in self.tasks if not self.deps[k]
         )
@@ -123,19 +127,8 @@ class DAG:
         # cache it so the host-side hot paths that re-sort the graph
         # (compiler passes, schedule generation, critical-path metrics)
         # pay O(V+E) once per DAG instead of once per call.
-        indeg = {k: len(self.deps[k]) for k in self.tasks}
-        stack = [k for k in self.tasks if indeg[k] == 0]
-        out: list[str] = []
-        while stack:
-            k = stack.pop()
-            out.append(k)
-            for c in self.children[k]:
-                indeg[c] -= 1
-                if indeg[c] == 0:
-                    stack.append(c)
-        if len(out) != len(self.tasks):
-            raise CycleError("task graph contains a cycle")
-        self._topo_order: tuple[str, ...] = tuple(out)
+        self._topo_order: tuple[str, ...] = toposort(
+            self.tasks, self.deps, self.children)
 
     def topological_order(self) -> list[str]:
         return list(self._topo_order)
@@ -178,10 +171,11 @@ class DAG:
 # workflows; the ROADMAP streaming open item).
 # ---------------------------------------------------------------------------
 
-# Placeholder dependency key inside an Expansion's subgraph: rewritten at
-# apply time to the synthetic base node that holds the expanding task's
-# own output value.
-EXPAND_BASE = "__expand_base__"
+# EXPAND_BASE — the placeholder dependency key inside an Expansion's
+# subgraph, rewritten at apply time to the synthetic base node that
+# holds the expanding task's own output value — is defined in
+# repro.analysis.dagcheck (imported above) so the standalone validator
+# shares it.
 
 
 def expansion_base_key(key: str, n: int) -> str:
@@ -356,73 +350,17 @@ class DynamicDAG(DAG):
             return dataclasses.replace(prior, value=expansion.value,
                                        replayed=True)
         depth = self._depths.get(key, 0) + 1
-        if depth > self.max_expansion_depth:
-            raise ExpansionError(
-                f"expansion depth {depth} at {key!r} exceeds "
-                f"max_expansion_depth={self.max_expansion_depth}")
         tasks = expansion.tasks
-        if not tasks:
-            raise ExpansionError("empty expansion")
-        keys = [t.key for t in tasks]
-        if len(set(keys)) != len(keys):
-            raise ExpansionError(f"duplicate keys in expansion: {keys}")
-        if expansion.final not in set(keys):
-            raise ExpansionError(
-                f"final {expansion.final!r} not among expansion tasks")
-        collisions = [k for k in keys if k in self.tasks or k == EXPAND_BASE]
-        if collisions:
-            raise ExpansionError(
-                f"expansion keys collide with existing tasks: {collisions}")
         n = self._expansion_counts.get(key, 0)
         base = expansion_base_key(key, n)
-        if base in self.tasks:
-            raise ExpansionError(f"base key {base!r} already exists")
-        allowed = set(keys) | {EXPAND_BASE}
-        sub_deps: dict[str, tuple[str, ...]] = {}
-        uses_base = False
-        for t in tasks:
-            deps = t.dependencies()
-            bad = [d for d in deps if d not in allowed]
-            if bad:
-                raise ExpansionError(
-                    f"expansion task {t.key!r} depends on {bad}; only "
-                    f"EXPAND_BASE and sibling expansion tasks are allowed "
-                    f"(self-contained expansions)")
-            if expansion.final in deps:
-                raise ExpansionError(
-                    f"expansion task {t.key!r} depends on the final task "
-                    f"{expansion.final!r}")
-            if not deps:
-                raise ExpansionError(
-                    f"expansion task {t.key!r} has no dependencies and "
-                    f"would never be triggered")
-            if EXPAND_BASE in deps:
-                uses_base = True
-            sub_deps[t.key] = deps
-        if not uses_base:
-            raise ExpansionError(
-                "no expansion task depends on EXPAND_BASE — the subgraph "
-                "has no entry point")
-        # Local topological order over {base} + subgraph (+ key as the
-        # re-bound final) — also the delta acyclicity check.
-        order = [base]
-        indeg = {k: sum(1 for d in sub_deps[k] if d != EXPAND_BASE)
-                 for k in keys}
-        stack = [k for k in keys if indeg[k] == 0]
-        rchildren: dict[str, list[str]] = {k: [] for k in keys}
-        for k in keys:
-            for d in sub_deps[k]:
-                if d != EXPAND_BASE:
-                    rchildren[d].append(k)
-        while stack:
-            k = stack.pop()
-            order.append(k)
-            for c in rchildren[k]:
-                indeg[c] -= 1
-                if indeg[c] == 0:
-                    stack.append(c)
-        if len(order) != len(keys) + 1:
-            raise ExpansionError("expansion subgraph contains a cycle")
+        # All structural rules — depth cap, collisions, self-containment,
+        # orphans, subgraph acyclicity — live in the unified validator
+        # (repro.analysis.dagcheck); it returns the subgraph keys plus
+        # the local topological order [base, ...subgraph...] the
+        # installer below consumes.
+        keys, order = check_expansion(
+            self.tasks, key, expansion, base, depth,
+            self.max_expansion_depth)
 
         # ---- install (validation done; mutate atomically) -----------------
         self._expansion_counts[key] = n + 1

@@ -50,6 +50,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Iterable, Mapping
 
+from repro.analysis.dagcheck import check_compiled
 from repro.core.dag import DAG, Task, TaskRef
 
 
@@ -313,7 +314,7 @@ def compile_dag(dag: DAG, config: OptimizeConfig | None = None) -> CompiledDAG:
                    f"{len(batches)} invocations",
         ))
 
-    return CompiledDAG(
+    compiled = CompiledDAG(
         tasks=tasks,
         clusters=clusters,
         delayed_fanins=delayed,
@@ -322,6 +323,11 @@ def compile_dag(dag: DAG, config: OptimizeConfig | None = None) -> CompiledDAG:
         pass_stats=stats,
         coalesce_batch=cfg.coalesce_batch if cfg.coalesce_fanouts else 0,
     )
+    # Pre-flight: every annotation the passes produced must be
+    # consistent with the rewritten graph (ConsistencyError here means a
+    # compiler-pass bug, caught before any executor is invoked).
+    check_compiled(compiled)
+    return compiled
 
 
 def ensure_compiled(dag: DAG, config: OptimizeConfig | None) -> DAG:

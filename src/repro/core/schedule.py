@@ -38,6 +38,7 @@ import threading as _threading
 from collections.abc import Mapping as _MappingABC
 from typing import Iterator, Mapping
 
+from repro.analysis.dagcheck import fan_in_counter_id as _counter_id
 from repro.core.dag import DAG
 
 
@@ -146,8 +147,9 @@ class ScheduleSet:
             getattr(self.dag, "delayed_fanins", frozenset()))
 
 
-def _counter_id(key: str) -> str:
-    return f"__fanin__/{key}"
+# _counter_id is repro.analysis.dagcheck.fan_in_counter_id (imported
+# above): the validator and the schedule generator must agree on the
+# "__fanin__/" registration prefix, so there is exactly one definition.
 
 
 # Shipped-code size estimate: real WUKONG cloudpickles task code into the

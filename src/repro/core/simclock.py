@@ -282,6 +282,11 @@ class BaseClock:
     def __init__(self) -> None:
         self._charge_lock = threading.Lock()
         self.charged_ms = 0.0
+        # Opt-in determinism sanitizer (repro.analysis.divergence.Tracer,
+        # duck-typed so the substrate never imports the analysis
+        # package): when set, every freshly generated effect is
+        # journaled via tracer.record(actor, effect, gen). None is free.
+        self.tracer: Any = None
 
     def _account(self, ms: float) -> None:
         with self._charge_lock:
@@ -325,6 +330,19 @@ class BaseClock:
         return run_effects(self, gen)
 
 
+def _blocking_actor_label(clock: BaseClock) -> str:
+    """Trace label for the thread substrates: ``actor#<seq>`` when the
+    clock tracks the current thread as a registered actor (VirtualClock),
+    else the thread name. Deterministic on the virtual substrate —
+    actors are numbered in registration order."""
+    current = getattr(clock, "_current", None)
+    if current is not None:
+        actor = current()
+        if actor is not None and hasattr(actor, "seq"):
+            return f"actor#{actor.seq}"
+    return threading.current_thread().name
+
+
 def run_effects(clock: BaseClock, gen: Any) -> Any:
     """Interpret an effect generator on the blocking (thread-based)
     primitives: the shared cross-check path for ``VirtualClock`` and
@@ -348,6 +366,9 @@ def run_effects(clock: BaseClock, gen: Any) -> Any:
             value = None
         except StopIteration as stop:
             return stop.value
+        tracer = getattr(clock, "tracer", None)
+        if tracer is not None:
+            tracer.record(_blocking_actor_label(clock), eff, gen)
         kind = eff[0]
         if kind == "charge":
             clock.charge(eff[1])
@@ -1157,6 +1178,13 @@ class EventClock(BaseClock):
                     except BaseException as e:
                         self._fail(frame, e)
                         return
+                    # Journal only freshly generated effects — a replayed
+                    # effect (deferred-flush re-issue) was already
+                    # recorded when the generator first yielded it.
+                    tracer = self.tracer
+                    if tracer is not None:
+                        tracer.record(
+                            f"{frame.name or 'frame'}#{frame.seq}", eff, gen)
                 kind = eff[0]
                 if kind == "charge":
                     ms = eff[1]

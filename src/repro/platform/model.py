@@ -34,7 +34,6 @@ from typing import Any, Callable
 from repro.core.cache import CacheRegistry
 from repro.core.kvstore import CostModel
 from repro.core.simclock import BaseClock, charge_meter
-
 from repro.platform.billing import BillingMeter
 from repro.platform.config import PlatformConfig
 from repro.platform.pool import ContainerPool

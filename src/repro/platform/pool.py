@@ -17,7 +17,6 @@ import threading
 from typing import Callable
 
 from repro.core.simclock import BaseClock
-
 from repro.platform.config import PlatformConfig
 
 

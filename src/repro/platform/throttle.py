@@ -20,7 +20,6 @@ import threading
 
 from repro.core.faults import exponential_backoff_ms
 from repro.core.simclock import BaseClock
-
 from repro.platform.config import PlatformConfig
 
 

@@ -1,0 +1,53 @@
+"""REPRO01x fixture: ``*_g`` generator-discipline violations.
+
+``SharedCounter`` owns a ``threading.Lock`` — the marker the linter
+uses for "instances are shared across actors", which is what arms
+REPRO010 for its ``*_g`` methods. ``FrameLocal`` has no lock: a
+frame-confined host whose post-yield mutations are legitimate.
+"""
+import threading
+
+
+class SharedCounter:
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self.count = 0
+        self.log: list = []
+
+    def bump_g(self):
+        self.count = 0  # MARK:pre-yield-ok (before first yield)
+        yield ("charge", 1.0)
+        self.count += 1  # MARK:post-yield-mutation
+        self.log.append(self.count)
+
+    def locked_bump_g(self):
+        yield ("charge", 1.0)
+        with self._lock:  # MARK:lock-across-yield
+            yield ("charge", 1.0)
+            self.count += 1
+
+    def lane_bump_g(self, lane):
+        yield ("acquire", lane)
+        self.count += 1  # MARK:lane-held-ok
+        lane.release()
+
+    def fetch_g(self, kv, key):
+        yield ("charge", 1.0)
+        return kv.get(key)  # MARK:blocking-kv
+
+    def timed_g(self, task_clock, compute, fn):
+        yield ("charge", 1.0)
+        with task_clock(compute):  # MARK:task-clock-no-flush
+            fn()
+        return self.count
+
+
+class FrameLocal:
+    """No threading lock: one actor drives every generator."""
+
+    def __init__(self) -> None:
+        self.count = 0
+
+    def bump_g(self):
+        yield ("charge", 1.0)
+        self.count += 1  # MARK:frame-local-ok

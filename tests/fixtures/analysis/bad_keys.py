@@ -1,0 +1,14 @@
+"""REPRO02x fixture: key-hygiene violations."""
+import zlib
+
+
+def shard_of(key: str, n: int) -> int:
+    return hash(key) % n  # MARK:builtin-hash
+
+
+def good_shard_of(key: str, n: int) -> int:
+    return zlib.crc32(key.encode()) % n  # MARK:crc32-ok
+
+
+def composed_key(job: str, task: str) -> str:
+    return "jobs::" + job + "::" + task  # MARK:namespace-literal

@@ -1,0 +1,20 @@
+"""REPRO002 fixture: unseeded randomness in actor code."""
+import random
+import zlib
+from random import shuffle
+
+
+def jitter() -> float:
+    return random.random()  # MARK:global-random
+
+
+def pick(xs: list) -> None:
+    shuffle(xs)  # MARK:from-import-shuffle
+
+
+def fresh_rng() -> "random.Random":
+    return random.Random()  # MARK:unseeded-ctor
+
+
+def seeded_rng(token: str) -> "random.Random":
+    return random.Random(zlib.crc32(token.encode()))  # MARK:seeded-ok

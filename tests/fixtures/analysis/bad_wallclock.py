@@ -1,0 +1,22 @@
+"""REPRO001 fixture: wall-clock reads in actor code (every sentinel
+line is asserted by tests/test_analysis.py)."""
+import time
+from datetime import datetime
+from time import monotonic
+
+
+def elapsed_cost() -> float:
+    start = time.time()  # MARK:time-time
+    return time.perf_counter() - start  # MARK:perf-counter
+
+
+def stamp() -> str:
+    return datetime.now().isoformat()  # MARK:datetime-now
+
+
+def tick() -> float:
+    return monotonic()  # MARK:from-import-monotonic
+
+
+def allowed_knob() -> None:
+    time.sleep(0.0)  # lint: allow(REPRO001) — MARK:pragma-ok

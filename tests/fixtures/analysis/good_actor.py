@@ -1,0 +1,26 @@
+"""Negative fixture: idiomatic actor code — zero findings expected."""
+import random
+import threading
+import zlib
+
+
+class PlacementModel:
+    """Shared (lock-owning) host whose generators stay disciplined."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self.placed = 0
+
+    def place_g(self, lane, kv, key):
+        rng = random.Random(zlib.crc32(key.encode()))
+        choice = rng.random()
+        value = yield from kv.get_g(key)
+        yield ("acquire", lane)
+        self.placed += 1
+        lane.release()
+        yield ("charge", 1.0)
+        return (choice, value)
+
+    def reset(self) -> None:
+        with self._lock:
+            self.placed = 0

@@ -6,6 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.configs import get_config, reduced
 from repro.core import EngineConfig, FaultConfig
 from repro.models import model as M
 from repro.optim import AdamWConfig, adamw_init
@@ -15,7 +16,6 @@ from repro.runtime.orchestrator import (
     build_training_workflow,
     run_training_workflow,
 )
-from repro.configs import get_config, reduced
 from repro.runtime.train import build_train_step, synthetic_batch
 
 

@@ -19,6 +19,8 @@ import time
 
 import pytest
 
+from repro.apps import tree_reduction_dag
+from repro.apps.tree_reduction import tree_reduction_expected
 from repro.core import (
     CostModel,
     EngineConfig,
@@ -32,8 +34,6 @@ from repro.core.simclock import (
     VirtualClock,
     clock_for_scale,
 )
-from repro.apps import tree_reduction_dag
-from repro.apps.tree_reduction import tree_reduction_expected
 
 
 # ---------------------------------------------------------------------------
